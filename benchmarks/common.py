@@ -1,0 +1,84 @@
+"""Shared benchmark setup: builds (or loads cached) precomputed stores per
+dataset profile x generation mode, mirroring the paper's §4 pipeline.
+
+Scale knob: REPRO_BENCH_SCALE env (default 1.0) multiplies store/user-query
+counts — the defaults keep `python -m benchmarks.run` to minutes on CPU;
+the paper's 150K-pair operating point is reached with scale ~19.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.embedder import HashEmbedder
+from repro.core.generator import (GenCfg, QueryGenerator, SyntheticOracleLM,
+                                  chunk_key)
+from repro.core.index import FlatIndex
+from repro.core.kb import build_kb, sample_user_queries
+from repro.core.store import PrecomputedStore
+from repro.core.tokenizer import Tokenizer
+
+SCALE = float(os.environ.get("REPRO_BENCH_SCALE", "1.0"))
+N_STORE = int(8000 * SCALE)
+N_USER = int(2000 * SCALE)
+DATASETS = ("squad", "narrativeqa", "triviaqa")
+
+ROOT = Path(__file__).resolve().parents[1] / "experiments"
+CACHE = ROOT / "bench_cache"
+OUT = ROOT / "bench"
+
+
+def out_write(name: str, payload: dict):
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / f"{name}.json").write_text(json.dumps(payload, indent=1,
+                                                 default=str))
+
+
+def build_setup(dataset: str, dedup: bool, n_store: int = None, seed=0):
+    """Returns dict(kb, emb, store, index, queries, responses, gen_stats)."""
+    n_store = n_store or N_STORE
+    key = f"{dataset}_{'dedup' if dedup else 'random'}_{n_store}_{seed}"
+    cache_dir = CACHE / key
+    emb = HashEmbedder()
+    kb = build_kb(dataset, seed=seed)
+    if (cache_dir / "manifest.json").exists():
+        store = PrecomputedStore.open_(cache_dir)
+        stats = json.loads((cache_dir / "gen_stats.json").read_text())
+    else:
+        tok = Tokenizer.from_texts([d.text() for d in kb.docs])
+        chunks = [chunk_key(d.doc_id, d.text()) for d in kb.docs]
+        gen = QueryGenerator(SyntheticOracleLM(kb), emb, tok,
+                             GenCfg(dedup=dedup))
+        store = PrecomputedStore(cache_dir, dim=emb.dim)
+        t0 = time.perf_counter()
+        qs, rs, es, st = gen.generate(chunks, n_store, store=store,
+                                      seed=seed + 11)
+        store.flush()
+        stats = {"generated": st.generated, "discarded": st.discarded,
+                 "seconds": st.seconds,
+                 "max_pair_seconds": st.max_pair_seconds,
+                 "sec_per_pair": st.seconds / max(st.generated, 1),
+                 "temp_final": st.temp_final}
+        (cache_dir / "gen_stats.json").write_text(json.dumps(stats))
+    index = FlatIndex(store.embeddings())
+    user = sample_user_queries(kb, N_USER, seed=seed + 77)
+    return {"kb": kb, "emb": emb, "store": store, "index": index,
+            "user": user, "gen_stats": stats}
+
+
+def hit_stats(setup, s_th_run: float, n_prefix: int = None):
+    """Search every user query; returns (hit_rate, rows, scores,
+    search_seconds_per_query)."""
+    emb, index, store = setup["emb"], setup["index"], setup["store"]
+    if n_prefix is not None:
+        index = FlatIndex(store.embeddings()[:n_prefix])
+    ue = emb.encode([q for q, _ in setup["user"]])
+    t0 = time.perf_counter()
+    v, i = index.search(ue, 1)
+    search_s = (time.perf_counter() - t0) / len(ue)
+    hits = v[:, 0] >= s_th_run
+    return float(hits.mean()), i[:, 0], v[:, 0], search_s

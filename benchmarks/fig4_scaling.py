@@ -1,0 +1,50 @@
+"""Fig 4: hit rate & storage vs number of precomputed queries (SQuAD),
+deduplicated vs random generation.
+
+One generation run per mode; hit rates at size N are computed over the
+first-N accepted pairs (exactly the store you would have had stopping at
+N). Storage bytes from the store's on-disk accounting (index + metadata
+split — the paper's 810 MB + 20 MB at 150K pairs).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import N_STORE, build_setup, hit_stats, out_write
+
+S_TH_RUN = 0.9
+
+
+def main():
+    sizes = [n for n in (500, 1000, 2000, 4000, 8000, 16000, 32000)
+             if n <= N_STORE] or [N_STORE]
+    rows = []
+    for dedup in (False, True):
+        setup = build_setup("squad", dedup)
+        per_row_bytes = (setup["store"].storage_bytes()["total_bytes"]
+                         / max(setup["store"].count, 1))
+        for n in sizes:
+            hr, _, _, search_s = hit_stats(setup, S_TH_RUN, n_prefix=n)
+            rows.append({"mode": "dedup" if dedup else "random",
+                         "n_queries": n, "hit_rate": hr,
+                         "storage_mb": n * per_row_bytes / 1e6,
+                         "search_s": search_s})
+    payload = {"s_th_run": S_TH_RUN, "rows": rows,
+               "paper_point": {"n": 150000, "storage_mb": 830,
+                               "hit_rate": 0.225}}
+    out_write("fig4_scaling", payload)
+    print("name,mode,n_queries,hit_rate,storage_mb")
+    for r in rows:
+        print(f"fig4,{r['mode']},{r['n_queries']},{r['hit_rate']:.3f},"
+              f"{r['storage_mb']:.2f}")
+    # monotone coverage growth + dedup dominance at the largest size
+    for mode in ("random", "dedup"):
+        hrs = [r["hit_rate"] for r in rows if r["mode"] == mode]
+        assert hrs[-1] >= hrs[0], (mode, hrs)
+    hr_at = {(r["mode"], r["n_queries"]): r["hit_rate"] for r in rows}
+    assert hr_at[("dedup", sizes[-1])] >= hr_at[("random", sizes[-1])]
+    return payload
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""§4 generation-cost numbers: seconds per precomputed pair (mean and the
+discard-inflated max), plus the REAL-JAX-LM timing for the same loop (the
+paper's 0.3 s/pair - 0.6 s/pair max was LLM-bound on an H100; our oracle
+generator is microseconds-bound, so the JAX-LM row is the honest analogue).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import build_setup, out_write
+from repro.configs import get_config, reduced
+from repro.core.embedder import HashEmbedder
+from repro.core.generator import GenCfg, QueryGenerator, chunk_key
+from repro.core.kb import build_kb
+from repro.core.tokenizer import Tokenizer
+from repro.models import model as M
+from repro.serving.engine import Engine
+from repro.serving.lm import TinyJaxLM
+
+
+def main():
+    # oracle-LM generation cost (from the cached table1 runs)
+    setup = build_setup("squad", dedup=True)
+    st = setup["gen_stats"]
+
+    # real-JAX-LM generation cost on a handful of pairs
+    kb = build_kb("squad", n_docs=4)
+    tok = Tokenizer.from_texts([d.text() for d in kb.docs], max_vocab=512)
+    cfg = dataclasses.replace(reduced(get_config("qwen3-1.7b")),
+                              vocab_size=tok.vocab_size, n_layers=2)
+    params = M.init_model(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    eng = Engine(cfg, params, tok, M.RunCfg(attn_impl="naive", remat=False),
+                 max_len=160, chunk=8)
+    lm = TinyJaxLM(eng)
+    gen = QueryGenerator(lm, HashEmbedder(), tok, GenCfg(dedup=True,
+                                                         s_th_gen=0.995))
+    chunks = [chunk_key(d.doc_id, d.text()) for d in kb.docs]
+    t0 = time.perf_counter()
+    qs, rs, _, jst = gen.generate(chunks, 6, seed=0)
+    jax_s_per_pair = (time.perf_counter() - t0) / max(len(qs), 1)
+
+    payload = {
+        "oracle_sec_per_pair": st["sec_per_pair"],
+        "oracle_max_pair_seconds": st["max_pair_seconds"],
+        "oracle_discard_frac": st["discarded"] / max(
+            st["generated"] + st["discarded"], 1),
+        "jaxlm_sec_per_pair_cpu": jax_s_per_pair,
+        "paper": {"sec_per_pair": 0.3, "max_sec_per_pair": 0.6},
+    }
+    out_write("gen_cost", payload)
+    print("name,metric,value")
+    for k, v in payload.items():
+        if k != "paper":
+            print(f"gen_cost,{k},{v}")
+    return payload
+
+
+if __name__ == "__main__":
+    main()

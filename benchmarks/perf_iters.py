@@ -1,0 +1,101 @@
+import os
+if "--xla" not in str(os.environ.get("XLA_FLAGS", "")):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb harness: named run-config variants per cell, each
+measured exactly like the baseline dry-run (collective probes + scan-aware
+jaxpr costs + full-compile memory). Results append to
+experiments/perf/<cell>__<variant>.json so every hypothesis->change->
+measure cycle in EXPERIMENTS.md §Perf is reproducible:
+
+  PYTHONPATH=src python -m benchmarks.perf_iters qwen3-train sp
+  PYTHONPATH=src python -m benchmarks.perf_iters --list
+"""
+import json
+import sys
+import time
+from pathlib import Path
+
+from repro.launch import dryrun as DR
+
+OUT = Path(__file__).resolve().parents[1] / "experiments" / "perf"
+
+# (cell-name) -> (arch, shape, {variant: run_overrides})
+CELLS = {
+    "qwen3-train": ("qwen3-1.7b", "train_4k", {
+        "baseline": {},
+        "sp": {"seq_parallel": True},
+        "sp-tri": {"seq_parallel": True, "schedule": "tri"},
+        "dp": {"_dp_only": True},
+        "dp-tri": {"_dp_only": True, "schedule": "tri"},
+    }),
+    "mamba2-prefill": ("mamba2-130m", "prefill_32k", {
+        "baseline": {"pin_ssm": False},
+        "pin": {"pin_ssm": True},
+        "pin-chunk512": {"pin_ssm": True, "ssm_chunk": 512},
+        "sp": {"pin_ssm": False, "seq_parallel": True},
+        "sp-chunk512": {"pin_ssm": False, "seq_parallel": True,
+                        "ssm_chunk": 512},
+        "sp-chunk1024": {"pin_ssm": False, "seq_parallel": True,
+                         "ssm_chunk": 1024},
+    }),
+    "mamba2-train": ("mamba2-130m", "train_4k", {
+        "baseline": {},
+        "sp": {"seq_parallel": True},
+        "sp-chunk512": {"seq_parallel": True, "ssm_chunk": 512},
+    }),
+    "deepseek-prefill": ("deepseek-v2-lite-16b", "prefill_32k", {
+        "baseline": {},
+        "tri": {"schedule": "tri"},
+        "sp": {"seq_parallel": True},
+        "sp-tri": {"seq_parallel": True, "schedule": "tri"},
+        "einsum-moe": {"moe_impl": "einsum"},
+    }),
+    "deepseek-train": ("deepseek-v2-lite-16b", "train_4k", {
+        "baseline": {},
+        "sp": {"seq_parallel": True},
+        "einsum-moe": {"moe_impl": "einsum"},
+    }),
+    "llama-train": ("llama3.2-3b", "train_4k", {
+        "baseline": {},
+        "sp": {"seq_parallel": True},
+    }),
+}
+
+
+def run(cell: str, variant: str, multi_pod=False):
+    arch, shape, variants = CELLS[cell]
+    ov = variants[variant]
+    t0 = time.time()
+    res = DR.run_cell(arch, shape, multi_pod=multi_pod, probes=True,
+                      run_overrides=ov or None, verbose=False)
+    res["variant"] = variant
+    res["overrides"] = ov
+    res["wall_s"] = round(time.time() - t0, 1)
+    OUT.mkdir(parents=True, exist_ok=True)
+    mesh = "pod2x16x16" if multi_pod else "pod16x16"
+    p = OUT / f"{cell}__{variant}__{mesh}.json"
+    p.write_text(json.dumps(res, indent=1, default=str))
+    r = res.get("roofline", {})
+    m = res.get("memory", {})
+    print(f"{cell}/{variant}: c={r.get('compute_s', 0):.4f} "
+          f"m={r.get('memory_s', 0):.4f} l={r.get('collective_s', 0):.4f} "
+          f"dom={r.get('dominant')} rf={r.get('roofline_frac', 0):.3f} "
+          f"mem={m.get('total_gb', 0):.1f}GB ({res['wall_s']}s)")
+    return res
+
+
+def main():
+    args = [a for a in sys.argv[1:] if not a.startswith("-")]
+    if "--list" in sys.argv or not args:
+        for c, (a, s, vs) in CELLS.items():
+            print(f"{c}: {a} x {s} -> {list(vs)}")
+        return
+    cell = args[0]
+    variants = args[1:] or list(CELLS[cell][2])
+    for v in variants:
+        run(cell, v)
+
+
+if __name__ == "__main__":
+    main()

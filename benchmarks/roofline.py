@@ -1,0 +1,64 @@
+"""Roofline table from the dry-run JSONs (experiments/dryrun/*.json).
+
+Prints the per-(arch x shape x mesh) three-term roofline and writes the
+markdown table EXPERIMENTS.md §Roofline embeds. Run the dry-run first:
+  PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DRY = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load_cells():
+    cells = []
+    for p in sorted(DRY.glob("*.json")):
+        cells.append(json.loads(p.read_text()))
+    return cells
+
+
+def fmt_row(c):
+    r = c.get("roofline", {})
+    m = c.get("memory", {})
+    if not r:
+        return (f"| {c['arch']} | {c['shape']} | {c['mesh']} | "
+                f"{c['status']} | | | | | | |")
+    return ("| {arch} | {shape} | {mesh} | ok | {ct:.4f} | {mt:.4f} | "
+            "{lt:.4f} | {dom} | {uf:.2f} | {rf:.3f} |".format(
+                arch=c["arch"], shape=c["shape"], mesh=c["mesh"],
+                ct=r["compute_s"], mt=r["memory_s"], lt=r["collective_s"],
+                dom=r["dominant"].replace("_s", ""),
+                uf=r.get("useful_flops_frac", 0.0),
+                rf=r.get("roofline_frac", 0.0)))
+
+
+def main():
+    cells = load_cells()
+    if not cells:
+        print("roofline,no dryrun results found — run repro.launch.dryrun")
+        return {"rows": 0}
+    hdr = ("| arch | shape | mesh | status | compute_s | memory_s | "
+           "collective_s | bound | useful_FLOPs | roofline_frac |\n"
+           "|---|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr] + [fmt_row(c) for c in cells]
+    md = "\n".join(lines)
+    out = DRY.parent / "roofline_table.md"
+    out.write_text(md + "\n")
+    ok = [c for c in cells if c.get("roofline")]
+    print("name,cells,ok,skipped_or_failed")
+    print(f"roofline,{len(cells)},{len(ok)},{len(cells) - len(ok)}")
+    for c in cells:
+        r = c.get("roofline", {})
+        if r:
+            print(f"roofline,{c['arch']},{c['shape']},{c['mesh']},"
+                  f"{r['dominant']},{r['roofline_frac']:.3f}")
+        else:
+            print(f"roofline,{c['arch']},{c['shape']},{c['mesh']},"
+                  f"{c['status'][:40]},-")
+    return {"rows": len(cells), "table": str(out)}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Quickstart: build a precomputed-query store from a knowledge base and
+serve queries through the StorInfer runtime.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+import tempfile
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core.embedder import HashEmbedder
+from repro.core.generator import (GenCfg, QueryGenerator, SyntheticOracleLM,
+                                  chunk_key)
+from repro.core.index import FlatIndex
+from repro.core.kb import build_kb, sample_user_queries
+from repro.core.runtime import RuntimeCfg, StorInferRuntime
+from repro.core.store import PrecomputedStore
+from repro.core.tokenizer import Tokenizer
+
+
+def main():
+    # 1. a knowledge base (stands in for the paper's SQuAD documents)
+    kb = build_kb("squad", n_docs=25)
+    chunks = [chunk_key(d.doc_id, d.text()) for d in kb.docs]
+    emb = HashEmbedder()
+    tok = Tokenizer.from_texts([d.text() for d in kb.docs])
+
+    # 2. OFFLINE: LLM-driven deduplicated query generation into the store
+    with tempfile.TemporaryDirectory() as td:
+        store = PrecomputedStore(td, dim=emb.dim)
+        gen = QueryGenerator(SyntheticOracleLM(kb), emb, tok,
+                             GenCfg(dedup=True))
+        qs, rs, es, stats = gen.generate(chunks, 1500, store=store, seed=0)
+        store.flush()
+        print(f"generated {stats.generated} pairs "
+              f"({stats.discarded} near-duplicates discarded, "
+              f"{stats.seconds:.1f}s); store = "
+              f"{store.storage_bytes()['total_bytes'] / 1e6:.2f} MB")
+
+        # 3. ONLINE: queries hit the store or fall through
+        rt = StorInferRuntime(FlatIndex(store.embeddings()), store, emb,
+                              engine=None, cfg=RuntimeCfg(s_th_run=0.9))
+        user = sample_user_queries(kb, 400, seed=5)
+        hits = 0
+        for q, fact in user[:400]:
+            r = rt.query(q)
+            hits += r.hit
+        print(f"hit rate @0.9 over {len(user)} user queries: "
+              f"{hits / len(user):.3f}")
+        r = rt.query(user[0][0])
+        print(f"example: {user[0][0]!r}\n  -> [{r.source}] {r.response!r} "
+              f"(search {r.search_s * 1e3:.2f} ms)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""StorInfer core: precomputed query-response storage for LLM inference.
+
+Subsystems (paper section in parens):
+  kb         — knowledge bases + user-query distributions (§4 datasets)
+  tokenizer  — deterministic text tokenizer (token budgets, tiny LMs)
+  embedder   — query embedding (hash n-gram SRP + MiniLM-class JAX encoder)
+  store      — disk-backed precomputed-pair store (memmap shards, §3.3)
+  index      — MIPS indexes: flat / IVF / mesh-sharded (§2 vector search)
+  generator  — deduplicated query generation: adaptive query masking +
+               adaptive sampling (§3.2)
+  runtime    — parallel search + cancellable LLM inference (§3.4, Fig 2)
+  metrics    — Unigram F1 / ROUGE-L / BERTScore-proxy (§4)
+  latency    — analytic latency models for the paper's H100 point + v5e
+"""

@@ -1,0 +1,115 @@
+"""StorInfer Runtime (§3.4, Fig 2): parallel vector search + LLM inference
+with hit-cancellation.
+
+On each query the runtime concurrently
+  (a) embeds the query and searches the precomputed store (CPU/storage
+      resources — a thread here; a dedicated mesh slice at pod scale), and
+  (b) starts LLM inference (chunked decode on the accelerator).
+If (a) returns a match with similarity >= S_th_Run, the stored response is
+returned immediately and a termination signal cancels (b) at the next chunk
+boundary — a miss therefore costs exactly the plain-LLM latency (the decode
+ran unimpeded the whole time).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Optional
+
+
+@dataclasses.dataclass
+class QueryResult:
+    response: str
+    source: str               # "store" | "llm"
+    hit: bool
+    score: float
+    matched_query: Optional[str]
+    search_s: float
+    llm_s: float
+    latency_s: float
+    chunks_run: int = 0
+
+
+@dataclasses.dataclass
+class RuntimeCfg:
+    s_th_run: float = 0.9
+    parallel: bool = True
+    add_misses: bool = False   # §3.1: optionally add new pairs on miss
+
+
+class StorInferRuntime:
+    def __init__(self, index, store, embedder, engine=None,
+                 cfg: RuntimeCfg = None):
+        """index: FlatIndex/IVFIndex/ShardedIndex over store embeddings;
+        store: PrecomputedStore; engine: serving.Engine or None (search-only
+        mode returns misses without LLM fallback)."""
+        self.index = index
+        self.store = store
+        self.embedder = embedder
+        self.engine = engine
+        self.cfg = cfg or RuntimeCfg()
+        self._pool = ThreadPoolExecutor(max_workers=2)
+
+    # -- the search half ------------------------------------------------------
+    def search(self, text: str):
+        t0 = time.perf_counter()
+        e = self.embedder.encode([text])
+        v, i = self.index.search(e, 1)
+        dt = time.perf_counter() - t0
+        return float(v[0, 0]), int(i[0, 0]), dt
+
+    # -- full parallel query path ----------------------------------------------
+    def query(self, text: str, *, max_new: int = 32,
+              temperature=None) -> QueryResult:
+        t0 = time.perf_counter()
+        fut = self._pool.submit(self.search, text)
+
+        session = None
+        if self.engine is not None:
+            session = self.engine.start_session(text, max_new=max_new,
+                                                temperature=temperature)
+
+        score = row = search_s = None
+        while session is not None and not session.done:
+            if fut.done():
+                score, row, search_s = fut.result()
+                if score >= self.cfg.s_th_run:
+                    session.cancel()         # Fig 2 termination signal
+                break                        # miss: decode continues below
+            session.step_chunk()
+        if score is None:                    # session won the race (or none)
+            score, row, search_s = fut.result()
+
+        if score >= self.cfg.s_th_run:
+            mq, resp = self.store.get_pair(row)
+            return QueryResult(
+                response=resp, source="store", hit=True, score=score,
+                matched_query=mq, search_s=search_s,
+                llm_s=(session.decode_s + session.prefill_s) if session
+                else 0.0,
+                latency_s=time.perf_counter() - t0,
+                chunks_run=session.chunks_run if session else 0)
+
+        # miss: let the LLM finish (it kept decoding the whole time)
+        llm_text = ""
+        if session is not None:
+            while not session.done:
+                session.step_chunk()
+            llm_text = session.text()
+            if self.cfg.add_misses:
+                e = self.embedder.encode([text])
+                self.store.add_batch(e, [text], [llm_text])
+        return QueryResult(
+            response=llm_text, source="llm", hit=False, score=score,
+            matched_query=None, search_s=search_s,
+            llm_s=(session.decode_s + session.prefill_s) if session else 0.0,
+            latency_s=time.perf_counter() - t0,
+            chunks_run=session.chunks_run if session else 0)
+
+    # -- batched search (benchmarks) --------------------------------------------
+    def search_batch(self, texts, k: int = 1):
+        t0 = time.perf_counter()
+        e = self.embedder.encode(list(texts))
+        v, i = self.index.search(e, k)
+        return v, i, time.perf_counter() - t0

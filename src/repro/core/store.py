@@ -1,0 +1,118 @@
+"""Disk-backed precomputed query-response store (§3.3).
+
+Layout on disk (root/):
+  manifest.json          — dim, dtype, count, shard list, storage split
+  emb_XXXX.npy           — embedding shards, (rows, dim) float16 memmap
+  text.jsonl             — one {"q": query, "r": response} per row
+  offsets.npy            — byte offset of each row in text.jsonl
+
+Embeddings are the "index tier" (paper: 810 MB DiskANN index for 150K),
+responses the "metadata tier" (paper: 20 MB); ``storage_bytes()`` reports
+the same split for Fig 4 / §4. Appends flush shard-at-a-time; ``open_``
+memory-maps the shards so a store larger than RAM still serves (the
+storage-as-memory-tier premise of the paper, adapted: host RAM/NVMe is the
+backing tier, device HBM the scan tier).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+SHARD_ROWS = 32768
+
+
+class PrecomputedStore:
+    def __init__(self, root, dim: int, emb_dtype="float16"):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.dim = dim
+        self.emb_dtype = np.dtype(emb_dtype)
+        self.count = 0
+        self.shards: List[dict] = []
+        self._text_f = open(self.root / "text.jsonl", "a+", encoding="utf-8")
+        self._offsets: List[int] = []
+        self._pending_embs: List[np.ndarray] = []
+        self._pending_rows = 0
+
+    # -- write path ---------------------------------------------------------
+    def add_batch(self, embs: np.ndarray, queries: Sequence[str],
+                  responses: Sequence[str]):
+        assert embs.shape == (len(queries), self.dim)
+        self._text_f.seek(0, 2)
+        for q, r in zip(queries, responses):
+            self._offsets.append(self._text_f.tell())
+            self._text_f.write(json.dumps({"q": q, "r": r}) + "\n")
+        self._pending_embs.append(embs.astype(self.emb_dtype))
+        self._pending_rows += len(queries)
+        self.count += len(queries)
+        while self._pending_rows >= SHARD_ROWS:
+            self._flush_shard(SHARD_ROWS)
+
+    def _flush_shard(self, rows):
+        buf = np.concatenate(self._pending_embs, axis=0)
+        shard, rest = buf[:rows], buf[rows:]
+        self._pending_embs = [rest] if len(rest) else []
+        self._pending_rows = len(rest)
+        name = f"emb_{len(self.shards):04d}.npy"
+        np.save(self.root / name, shard)
+        self.shards.append({"file": name, "rows": int(shard.shape[0])})
+
+    def flush(self):
+        if self._pending_rows:
+            self._flush_shard(self._pending_rows)
+        self._text_f.flush()
+        np.save(self.root / "offsets.npy",
+                np.asarray(self._offsets, np.int64))
+        manifest = {"dim": self.dim, "count": self.count,
+                    "emb_dtype": str(self.emb_dtype),
+                    "shards": self.shards}
+        (self.root / "manifest.json").write_text(json.dumps(manifest))
+
+    # -- read path ------------------------------------------------------------
+    @classmethod
+    def open_(cls, root) -> "PrecomputedStore":
+        root = Path(root)
+        man = json.loads((root / "manifest.json").read_text())
+        st = cls.__new__(cls)
+        st.root = root
+        st.dim = man["dim"]
+        st.emb_dtype = np.dtype(man["emb_dtype"])
+        st.count = man["count"]
+        st.shards = man["shards"]
+        st._offsets = np.load(root / "offsets.npy").tolist()
+        st._text_f = open(root / "text.jsonl", "r", encoding="utf-8")
+        st._pending_embs, st._pending_rows = [], 0
+        return st
+
+    def embeddings(self, mmap: bool = True) -> np.ndarray:
+        """All flushed embeddings, (count, dim). Memory-mapped by default."""
+        parts = [np.load(self.root / s["file"],
+                         mmap_mode="r" if mmap else None)
+                 for s in self.shards]
+        if self._pending_embs:
+            parts += self._pending_embs
+        if not parts:
+            return np.zeros((0, self.dim), self.emb_dtype)
+        return np.concatenate([np.asarray(p) for p in parts], axis=0)
+
+    def get_pair(self, row: int) -> Tuple[str, str]:
+        self._text_f.seek(self._offsets[row])
+        d = json.loads(self._text_f.readline())
+        return d["q"], d["r"]
+
+    def get_response(self, row: int) -> str:
+        return self.get_pair(row)[1]
+
+    # -- accounting -----------------------------------------------------------
+    def storage_bytes(self) -> dict:
+        index_b = sum((self.root / s["file"]).stat().st_size
+                      for s in self.shards)
+        text_p = self.root / "text.jsonl"
+        off_p = self.root / "offsets.npy"
+        meta_b = (text_p.stat().st_size if text_p.exists() else 0) \
+            + (off_p.stat().st_size if off_p.exists() else 0)
+        return {"index_bytes": index_b, "metadata_bytes": meta_b,
+                "total_bytes": index_b + meta_b, "rows": self.count}

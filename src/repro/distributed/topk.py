@@ -1,0 +1,42 @@
+"""Distributed top-k for the mesh-sharded MIPS index.
+
+The precomputed-query embedding matrix is row-sharded over the "model" axis;
+each device scans its shard (one matmul — the Pallas ``mips_topk`` kernel on
+real TPUs), takes a local top-k, then an all-gather of the (k-sized)
+candidate lists and a final top-k. Traffic per query: shards * k * 8 bytes —
+independent of store size N.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def sharded_mips_topk(queries, emb, k, *, mesh, shard_axis="model",
+                      local_scan=None):
+    """queries: (Q, D) replicated; emb: (N, D) row-sharded over shard_axis.
+
+    Returns (scores (Q, k), indices (Q, k)) — replicated, GLOBAL row ids.
+    ``local_scan(q, e, k) -> (vals, idx)`` optionally overrides the local
+    shard scan (e.g. with the Pallas kernel); default is matmul + lax.top_k.
+    """
+
+    def default_scan(q, e, k):
+        s = q.astype(jnp.float32) @ e.T.astype(jnp.float32)
+        return jax.lax.top_k(s, k)
+
+    scan = local_scan or default_scan
+
+    def local(q, e):
+        offset = jax.lax.axis_index(shard_axis) * e.shape[0]
+        v, i = scan(q, e, k)
+        i = i + offset
+        vg = jax.lax.all_gather(v, shard_axis, axis=1, tiled=True)
+        ig = jax.lax.all_gather(i, shard_axis, axis=1, tiled=True)
+        vf, pos = jax.lax.top_k(vg, k)
+        return vf, jnp.take_along_axis(ig, pos, axis=1)
+
+    sm = jax.shard_map(local, mesh=mesh, in_specs=(P(), P(shard_axis)),
+                       out_specs=(P(), P()), check_vma=False)
+    return sm(queries, emb)

@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: flash-decoding (split-KV single-token attention).
+
+One new token attends a long KV cache: the cache splits into ``n_splits``
+chunks along T; grid (B, n_splits) computes a partial (o, m, l) per chunk
+(all heads at once — the (Hq x D) @ (D x Tc) score matmul feeds the MXU),
+and the host-side combine (ops.py) does the max-rescale merge. This is the
+single-chip analogue of the shard_map seq-sharded decode in
+repro.distributed.decode_attn (splits -> devices).
+
+The per-request valid length arrives as a (B, 1) i32 input (SMEM-prefetch
+scalar on real TPUs; plain input block in interpret mode).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                   *, scale, tc, G):
+    s_id = pl.program_id(1)
+    q = q_ref[0]                                       # (Hq, D)
+    k = k_ref[0]                                       # (tc, Hkv, D)
+    v = v_ref[0]                                       # (tc, Hkv, D)
+    Hq, D = q.shape
+    Hkv = k.shape[1]
+    qg = q.reshape(Hkv, G, D)
+    s = jnp.einsum("kgd,tkd->kgt", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    pos = s_id * tc + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+    s = jnp.where(pos <= len_ref[0, 0], s, NEG)
+    m = jnp.max(s, axis=2)                             # (Hkv, G)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=2)
+    o = jnp.einsum("kgt,tkd->kgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    o_ref[0, 0] = o.reshape(Hq, D).astype(o_ref.dtype)
+    m_ref[0, 0] = m.reshape(Hq)
+    l_ref[0, 0] = l.reshape(Hq)
+
+
+def decode_attention_pallas(q, k, v, lengths, *, n_splits=8, interpret=True):
+    """q: (B, Hq, D); k, v: (B, T, Hkv, D); lengths: (B,) i32 — attend
+    positions [0, lengths]. Returns per-split partials
+    (o (B, ns, Hq, D) f32, m (B, ns, Hq) f32, l (B, ns, Hq) f32)."""
+    B, Hq, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    ns = n_splits
+    tc = -(-T // ns)
+    Tp = ns * tc
+    if Tp != T:
+        k = jnp.pad(k, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    Dp = -(-D // 128) * 128
+    if Dp != D:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, Dp - D)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, 0), (0, Dp - D)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, Dp - D)))
+
+    kernel = functools.partial(_decode_kernel, scale=D ** -0.5, tc=tc, G=G)
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid=(B, ns),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, s: (b, 0)),          # lengths
+            pl.BlockSpec((1, Hq, Dp), lambda b, s: (b, 0, 0)),  # q resident
+            pl.BlockSpec((1, tc, Hkv, Dp), lambda b, s: (b, s, 0, 0)),
+            pl.BlockSpec((1, tc, Hkv, Dp), lambda b, s: (b, s, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Hq, Dp), lambda b, s: (b, s, 0, 0)),
+            pl.BlockSpec((1, 1, Hq), lambda b, s: (b, s, 0)),
+            pl.BlockSpec((1, 1, Hq), lambda b, s: (b, s, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, ns, Hq, Dp), jnp.float32),
+            jax.ShapeDtypeStruct((B, ns, Hq), jnp.float32),
+            jax.ShapeDtypeStruct((B, ns, Hq), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths.reshape(B, 1).astype(jnp.int32), q, k, v)
+    return o[..., :D], m, l
+
+
+def combine_splits(o, m, l):
+    """(B,ns,Hq,D),(B,ns,Hq),(B,ns,Hq) -> (B,Hq,D) flash merge."""
+    m_g = jnp.max(m, axis=1, keepdims=True)
+    corr = jnp.exp(m - m_g)
+    l_g = jnp.sum(l * corr, axis=1)
+    o_g = jnp.sum(o * corr[..., None], axis=1)
+    return o_g / jnp.maximum(l_g, 1e-30)[..., None]

@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: causal GQA flash attention (prefill/train forward).
+
+Standard TPU flash schedule: grid (B, Hq, nq, nk) with the LAST dim the
+sequential KV walk ("arbitrary" dimension semantics); the running
+(acc, m, l) triple lives in VMEM scratch carried across kv steps, o is
+written on the final step. KV blocks index through the GQA map h -> h // G.
+
+Block sizes default (qb=256, kb=512, D<=128-padded): VMEM per step ~
+qb*D + kb*D + qb*kb floats ~ 0.8 MB << 16 MB v5e VMEM; both matmuls hit the
+MXU at (qb x D) @ (D x kb) and (qb x kb) @ (kb x D).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc, m_scr, l_scr,
+                  *, scale, causal, qb, kb, nk, t_real):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+
+    q = q_ref[0, 0]                                   # (qb, D)
+    k = k_ref[0, 0]                                   # (kb, D)
+    v = v_ref[0, 0]                                   # (kb, D)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    cols = kj * kb + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = cols < t_real                              # padded KV columns
+    if causal:
+        rows = qi * qb + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        mask = mask & (cols <= rows)
+    s = jnp.where(mask, s, NEG)
+
+    m_prev = m_scr[:, 0]                              # (qb,)
+    l_prev = l_scr[:, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_new = l_prev * alpha + jnp.sum(p, axis=1)
+    acc[...] = (acc[...] * alpha[:, None]
+                + jnp.dot(p.astype(v.dtype), v,
+                          preferred_element_type=jnp.float32))
+    m_scr[:, 0] = m_new
+    l_scr[:, 0] = l_new
+
+    @pl.when(kj == nk - 1)
+    def _fin():
+        o_ref[0, 0] = (acc[...] /
+                       jnp.maximum(l_scr[:, 0], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal=True, q_block=256,
+                           kv_block=512, interpret=True):
+    """q: (B, Hq, S, D); k, v: (B, Hkv, T, D). Returns (B, Hq, S, D).
+
+    Head-major layout (transposed by ops.py from the model's (B,S,H,D)).
+    """
+    B, Hq, S, D = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = D ** -0.5
+    qb, kb = min(q_block, S), min(kv_block, T)
+    nq, nk = -(-S // qb), -(-T // kb)
+    Sp, Tp = nq * qb, nk * kb
+    Dp = -(-D // 128) * 128
+    q = jnp.pad(q, ((0, 0), (0, 0), (0, Sp - S), (0, Dp - D)))
+    k = jnp.pad(k, ((0, 0), (0, 0), (0, Tp - T), (0, Dp - D)))
+    v = jnp.pad(v, ((0, 0), (0, 0), (0, Tp - T), (0, Dp - D)))
+
+    kernel = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                               qb=qb, kb=kb, nk=nk, t_real=T)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, qb, Dp), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, kb, Dp),
+                         lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, kb, Dp),
+                         lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, qb, Dp),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sp, Dp), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qb, Dp), jnp.float32),
+            pltpu.VMEM((qb, 1), jnp.float32),
+            pltpu.VMEM((qb, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :S, :D]

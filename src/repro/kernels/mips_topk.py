@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: tiled MIPS + per-tile top-k (the StorInfer hot spot).
+
+The paper scans a DiskANN graph on CPU; on TPU the same search is a matmul
+(DESIGN.md §3): the store shard streams through VMEM in (TILE_N, D) blocks,
+each block scoring against the resident query block on the MXU, followed by
+an on-chip iterative top-k over the tile. The host-side combine (ops.py)
+reduces the (n_tiles, Q, K) candidates with one final lax.top_k —
+O(n_tiles * K) per query, independent of N.
+
+Tiling:
+  q   : (Q, D)       resident in VMEM for the whole grid (Q <= ~1024)
+  x   : (TILE_N, D)  one store tile per grid step (128-aligned)
+  out : (Q, K) vals + (Q, K) idx per tile, written to grid slot i
+
+VMEM working set per step ~= Q*D + TILE_N*D + Q*TILE_N floats; defaults
+(Q<=256, TILE_N=512, D=384) ~ 1 MB — far under the ~16 MB v5e VMEM budget;
+the MXU sees (Q x D) @ (D x TILE_N) with D padded to a lane multiple of 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _mips_kernel(q_ref, x_ref, vals_ref, idx_ref, *, k, tile_n, n_real):
+    i = pl.program_id(0)
+    q = q_ref[...]                                    # (Q, D)
+    x = x_ref[...]                                    # (TILE_N, D)
+    s = jnp.dot(q, x.T, preferred_element_type=jnp.float32)  # (Q, TILE_N)
+    # mask padded store rows (beyond n_real)
+    row_global = i * tile_n + jax.lax.broadcasted_iota(jnp.int32,
+                                                       s.shape, 1)
+    s = jnp.where(row_global < n_real, s, NEG)
+    cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    for kk in range(k):                               # iterative top-k
+        m = jnp.max(s, axis=1)                        # (Q,)
+        a = jnp.argmax(s, axis=1).astype(jnp.int32)   # (Q,)
+        vals_ref[0, :, kk] = m
+        idx_ref[0, :, kk] = a
+        s = jnp.where(cols == a[:, None], NEG, s)
+
+
+def mips_topk_pallas(q, x, k, *, tile_n=512, interpret=True):
+    """q: (Q, D) f32; x: (N, D) f32. Returns per-tile candidates
+    (vals (nt, Q, k), idx-global (nt, Q, k))."""
+    Q, D = q.shape
+    N = x.shape[0]
+    nt = -(-N // tile_n)
+    N_pad = nt * tile_n
+    if N_pad != N:
+        x = jnp.pad(x, ((0, N_pad - N), (0, 0)))
+    Dp = -(-D // 128) * 128                           # lane alignment
+    if Dp != D:
+        q = jnp.pad(q, ((0, 0), (0, Dp - D)))
+        x = jnp.pad(x, ((0, 0), (0, Dp - D)))
+
+    kernel = functools.partial(_mips_kernel, k=k, tile_n=tile_n, n_real=N)
+    vals, idx = pl.pallas_call(
+        kernel,
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec((Q, Dp), lambda i: (0, 0)),        # q resident
+            pl.BlockSpec((tile_n, Dp), lambda i: (i, 0)),   # x streamed
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, Q, k), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nt, Q, k), jnp.float32),
+            jax.ShapeDtypeStruct((nt, Q, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q, x)
+    # per-tile local idx -> global row ids
+    offs = (jnp.arange(nt, dtype=jnp.int32) * tile_n)[:, None, None]
+    return vals, idx + offs

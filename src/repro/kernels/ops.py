@@ -1,0 +1,54 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True when no TPU is present (this container), so
+the same call sites run the kernel body on CPU for correctness and compile
+to Mosaic on a real TPU (interpret=False).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import (combine_splits,
+                                            decode_attention_pallas)
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.mips_topk import mips_topk_pallas
+
+
+def _default_interpret():
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3))
+def mips_topk(q, x, k, tile_n=512):
+    """q: (Q,D); x: (N,D) -> exact (vals (Q,k), GLOBAL idx (Q,k))."""
+    vals, idx = mips_topk_pallas(q, x, k, tile_n=tile_n,
+                                 interpret=_default_interpret())
+    nt = vals.shape[0]
+    Q = vals.shape[1]
+    vflat = jnp.moveaxis(vals, 0, 1).reshape(Q, nt * k)
+    iflat = jnp.moveaxis(idx, 0, 1).reshape(Q, nt * k)
+    v, pos = jax.lax.top_k(vflat, k)
+    return v, jnp.take_along_axis(iflat, pos, axis=1)
+
+
+@functools.partial(jax.jit, static_argnums=(3, 4, 5))
+def flash_attention(q, k, v, causal=True, q_block=256, kv_block=512):
+    """Model layout: q (B,S,Hq,D); k,v (B,T,Hkv,D) -> (B,S,Hq,D)."""
+    qt = jnp.transpose(q, (0, 2, 1, 3))
+    kt = jnp.transpose(k, (0, 2, 1, 3))
+    vt = jnp.transpose(v, (0, 2, 1, 3))
+    o = flash_attention_pallas(qt, kt, vt, causal=causal, q_block=q_block,
+                               kv_block=kv_block,
+                               interpret=_default_interpret())
+    return jnp.transpose(o, (0, 2, 1, 3))
+
+
+@functools.partial(jax.jit, static_argnums=(4,))
+def decode_attention(q, k, v, lengths, n_splits=8):
+    """q: (B,Hq,D); k,v: (B,T,Hkv,D); lengths (B,) -> (B,Hq,D)."""
+    o, m, l = decode_attention_pallas(q, k, v, lengths, n_splits=n_splits,
+                                      interpret=_default_interpret())
+    return combine_splits(o, m, l)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for every kernel in this package (the allclose targets
+for the interpret-mode shape/dtype sweeps in tests/test_kernels.py)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mips_topk_ref(q, x, k):
+    """q: (Q,D); x: (N,D) -> (vals (Q,k), idx (Q,k)) exact MIPS top-k."""
+    s = q.astype(jnp.float32) @ x.astype(jnp.float32).T
+    return jax.lax.top_k(s, k)
+
+
+def attention_ref(q, k, v, *, causal=True):
+    """Head-major GQA attention oracle. q: (B,Hq,S,D); k,v: (B,Hkv,T,D)."""
+    B, Hq, S, D = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, S, D)
+    s = jnp.einsum("bkgsd,bktd->bkgst", qg, k).astype(jnp.float32)
+    s = s * (D ** -0.5)
+    if causal:
+        mask = jnp.arange(T)[None, :] <= jnp.arange(S)[:, None]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,bktd->bkgsd", p.astype(v.dtype), v)
+    return o.reshape(B, Hq, S, D)
+
+
+def decode_attention_ref(q, k, v, lengths):
+    """q: (B,Hq,D); k,v: (B,T,Hkv,D); attend [0, lengths[b]] inclusive."""
+    B, Hq, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, k).astype(jnp.float32)
+    s = s * (D ** -0.5)
+    mask = jnp.arange(T)[None, :] <= lengths[:, None]
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", p.astype(jnp.float32),
+                   v.astype(jnp.float32))
+    return o.reshape(B, Hq, D)

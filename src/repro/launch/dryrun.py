@@ -1,0 +1,231 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell on the production mesh, extract roofline terms, and persist JSON.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and the dry-run needs 512 placeholder host devices to build the
+(pod=2, data=16, model=16) mesh. (Smoke tests / benches import jax normally
+and see 1 device — this env var is intentionally NOT set globally.)
+
+Per cell:
+  1. FULL-depth compile (scan over layers)     -> memory_analysis (fits?),
+     raw cost_analysis, collective op census.
+  2. jaxpr walk (scan-aware)                   -> exact FLOPs + bytes model.
+  3. depth-1/depth-2 UNROLLED probe compiles   -> per-layer collective bytes
+     (collectives inside while bodies appear once in HLO text regardless of
+     trip count — measured; hence unrolled probes + linear extrapolation).
+     Hybrid/enc-dec stacks are python-unrolled already: parsed directly.
+  4. Roofline terms (TPU v5e): compute = FLOPs/chip / 197e12, memory =
+     bytes/chip / 819e9, collective = coll_bytes/chip / (3 links x ~50GB/s
+     usable per link -> harness uses 1 link conservatively; see report).
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-3b --shape train_4k
+  python -m repro.launch.dryrun --all [--multipod/--single] [--force]
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.configs import SHAPES, get_config, list_configs
+from repro.launch import costs as C
+from repro.launch import hlo_collectives as HC
+from repro.launch import specs as SP
+from repro.launch.mesh import make_production_mesh
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link (1 link assumed engaged)
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+ARCHS = [a for a in
+         ("deepseek-v2-lite-16b", "grok-1-314b", "whisper-base",
+          "llama3.2-3b", "starcoder2-7b", "qwen3-1.7b", "qwen2.5-32b",
+          "zamba2-1.2b", "qwen2-vl-72b", "mamba2-130m")]
+
+
+def _compile(plan):
+    jfn = jax.jit(plan.fn, in_shardings=plan.in_shardings,
+                  out_shardings=plan.out_shardings,
+                  donate_argnums=plan.donate)
+    t0 = time.time()
+    lowered = jfn.lower(*plan.arg_structs)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    return lowered, compiled, t1 - t0, t2 - t1
+
+
+def run_cell(arch, shape_name, *, multi_pod, probes=True, run_overrides=None,
+             accum=None, verbose=True):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    reason = SP.skip_reason(cfg, shape)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    out = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "status": "ok"}
+    if reason:
+        out["status"] = reason
+        return out
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    plan = SP.build_cell(arch, shape_name, mesh, run_overrides=run_overrides,
+                         accum=accum)
+    out["notes"] = plan.notes
+
+    # ---- 1. full-depth compile -------------------------------------------
+    lowered, compiled, t_low, t_comp = _compile(plan)
+    ma = compiled.memory_analysis()
+    out["timings"] = {"lower_s": round(t_low, 2), "compile_s": round(t_comp, 2)}
+    total = (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+             + ma.output_size_in_bytes - ma.alias_size_in_bytes)
+    out["memory"] = {
+        "args_gb": ma.argument_size_in_bytes / 1e9,
+        "temp_gb": ma.temp_size_in_bytes / 1e9,
+        "out_gb": ma.output_size_in_bytes / 1e9,
+        "alias_gb": ma.alias_size_in_bytes / 1e9,
+        "total_gb": total / 1e9,
+        "fits_16gb": total < 16e9,
+    }
+    ca = compiled.cost_analysis() or {}
+    out["xla_cost"] = {"flops_per_dev": ca.get("flops", 0.0),
+                       "bytes_per_dev": ca.get("bytes accessed", 0.0),
+                       "note": "scan bodies counted once (see costs.py)"}
+    full_coll = HC.collective_bytes(compiled.as_text())
+    out["collectives_full_hlo"] = {"counts": full_coll["counts"],
+                                   "non_entry": full_coll["non_entry_collectives"]}
+
+    # ---- 2. jaxpr walk (exact flops, bytes model) ------------------------
+    jc = C.fn_costs(plan.fn, *plan.arg_structs)
+    out["jaxpr"] = {"flops_global": jc["flops"], "bytes_global": jc["bytes"],
+                    "warnings": jc["warnings"]}
+
+    # ---- 3. collective bytes via unrolled probes -------------------------
+    unrolled_families = ("hybrid",)
+    coll_total = None
+    if cfg.family in unrolled_families or cfg.is_encoder_decoder:
+        coll_total = full_coll["total_bytes"]
+        out["collectives"] = {"method": "direct(full unrolled stack)",
+                              "bytes_per_dev": coll_total,
+                              "by_op": full_coll["bytes"]}
+    elif probes:
+        d1, d2, full_stack, s1 = SP.probe_depths(cfg)
+        probe_res = []
+        for dcfg in (d1, d2):
+            pplan = SP.build_cell(arch, shape_name, mesh, cfg=dcfg,
+                                  run_overrides=dict(
+                                      (run_overrides or {}),
+                                      scan_layers=False),
+                                  accum=accum)
+            _, pc, _, _ = _compile(pplan)
+            probe_res.append(HC.collective_bytes(pc.as_text()))
+        c1, c2 = (p["total_bytes"] for p in probe_res)
+        per_layer = c2 - c1
+        coll_total = c1 + per_layer * (full_stack - s1)
+        out["collectives"] = {
+            "method": "unrolled depth-1/2 probes + linear extrapolation",
+            "bytes_per_dev": coll_total,
+            "probe_bytes": [c1, c2],
+            "per_layer_bytes": per_layer,
+            "non_entry_flags": [p["non_entry_collectives"]
+                                for p in probe_res],
+            "by_op_probe2": probe_res[1]["bytes"],
+        }
+
+    # ---- 4. roofline terms ------------------------------------------------
+    flops_chip = jc["flops"] / n_dev
+    bytes_chip = jc["bytes"] / n_dev
+    t_compute = flops_chip / PEAK_FLOPS
+    t_memory = bytes_chip / HBM_BW
+    t_coll = (coll_total or 0.0) / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dom = max(terms, key=terms.get)
+    # model flops: 6*N_active*D train, 2*N_active*D inference
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if plan.kind != "decode"
+                                   else 1)
+    model_flops = (6 if plan.kind == "train" else 2) * n_active * tokens
+    out["roofline"] = dict(
+        terms, dominant=dom,
+        flops_per_chip=flops_chip, bytes_per_chip=bytes_chip,
+        collective_bytes_per_chip=coll_total,
+        model_flops_global=model_flops,
+        useful_flops_frac=model_flops / max(jc["flops"], 1.0),
+        bound_step_time_s=max(terms.values()),
+        roofline_frac=t_compute / max(max(terms.values()), 1e-30),
+    )
+    if verbose:
+        print(json.dumps({k: out[k] for k in
+                          ("arch", "shape", "mesh", "memory", "roofline")},
+                         indent=1, default=str))
+    return out
+
+
+def cell_path(arch, shape_name, mesh_name):
+    return RESULTS_DIR / f"{arch}__{shape_name}__{mesh_name}.json"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--single", action="store_true",
+                    help="single-pod 16x16 (default when not --multipod)")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--accum", type=int, default=None)
+    args = ap.parse_args()
+
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    meshes = [args.multipod] if not args.both_meshes else [False, True]
+    cells = []
+    if args.all:
+        for a in ARCHS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        cells.append((args.arch, args.shape))
+
+    failures = 0
+    for arch, shape_name in cells:
+        for mp in meshes:
+            mesh_name = "pod2x16x16" if mp else "pod16x16"
+            path = cell_path(arch, shape_name, mesh_name)
+            if path.exists() and not args.force:
+                print(f"[skip-cached] {path.name}")
+                continue
+            t0 = time.time()
+            try:
+                res = run_cell(arch, shape_name, multi_pod=mp,
+                               probes=not args.no_probes, accum=args.accum,
+                               verbose=False)
+            except Exception as e:
+                failures += 1
+                res = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                       "status": f"FAIL: {type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-4000:]}
+            res["wall_s"] = round(time.time() - t0, 1)
+            path.write_text(json.dumps(res, indent=1, default=str))
+            print(f"[{res['status'][:60]:<60}] {path.name} "
+                  f"({res['wall_s']}s)")
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Refresh jaxpr-derived costs + roofline terms in existing dry-run JSONs
+(trace-only — no recompilation; collective bytes and memory_analysis are
+kept from the original compile)."""
+import json
+import sys
+from pathlib import Path
+
+import jax
+
+from repro.launch import costs as C
+from repro.launch import specs as SP
+from repro.launch.dryrun import (HBM_BW, ICI_BW, PEAK_FLOPS, RESULTS_DIR)
+from repro.launch.mesh import make_production_mesh
+from repro.configs import SHAPES, get_config
+
+
+def refresh(path: Path):
+    d = json.loads(path.read_text())
+    if d.get("status") != "ok":
+        return "skip"
+    mesh = make_production_mesh(multi_pod=(d["mesh"] == "pod2x16x16"))
+    plan = SP.build_cell(d["arch"], d["shape"], mesh)
+    jc = C.fn_costs(plan.fn, *plan.arg_structs)
+    n = mesh.size
+    d["jaxpr"] = {"flops_global": jc["flops"], "bytes_global": jc["bytes"],
+                  "warnings": jc["warnings"]}
+    coll = d.get("collectives", {}).get("bytes_per_dev") or 0.0
+    cfg = get_config(d["arch"])
+    shape = SHAPES[d["shape"]]
+    flops_chip = jc["flops"] / n
+    bytes_chip = jc["bytes"] / n
+    terms = {"compute_s": flops_chip / PEAK_FLOPS,
+             "memory_s": bytes_chip / HBM_BW,
+             "collective_s": coll / ICI_BW}
+    dom = max(terms, key=terms.get)
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if plan.kind != "decode"
+                                   else 1)
+    model_flops = (6 if plan.kind == "train" else 2) * n_active * tokens
+    d["roofline"] = dict(
+        terms, dominant=dom, flops_per_chip=flops_chip,
+        bytes_per_chip=bytes_chip, collective_bytes_per_chip=coll,
+        model_flops_global=model_flops,
+        useful_flops_frac=model_flops / max(jc["flops"], 1.0),
+        bound_step_time_s=max(terms.values()),
+        roofline_frac=terms["compute_s"] / max(max(terms.values()), 1e-30))
+    path.write_text(json.dumps(d, indent=1, default=str))
+    return "ok"
+
+
+def main():
+    for p in sorted(RESULTS_DIR.glob("*.json")):
+        try:
+            r = refresh(p)
+        except Exception as e:
+            r = f"ERR {type(e).__name__}: {e}"
+        print(p.name, r, flush=True)
+
+
+if __name__ == "__main__":
+    main()

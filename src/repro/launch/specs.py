@@ -1,0 +1,260 @@
+"""Per-cell (architecture x input-shape x mesh) lowering plans for the
+dry-run: ShapeDtypeStruct inputs (never allocated), sharding assignments,
+and the step function to lower.
+
+Shape kinds map to functions:
+  train_*    -> train_step   (fwd+bwd+AdamW, microbatch accumulation)
+  prefill_*  -> prefill      (full forward + cache construction)
+  decode_* / long_* -> serve_step (one token against a seq_len KV cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.distributed import sharding as Sh
+from repro.launch.mesh import batch_axes_of
+from repro.models import model as M
+from repro.training import optimizer as O
+from repro.training import train as T
+
+# Per-arch gradient-accumulation defaults for train_4k (1M-token global
+# batch): chosen so activations fit 16 GB/chip (see EXPERIMENTS.md §Dry-run).
+TRAIN_ACCUM = {
+    "qwen2-vl-72b": 8, "grok-1-314b": 8, "qwen2.5-32b": 8,
+    "starcoder2-7b": 4, "deepseek-v2-lite-16b": 2, "llama3.2-3b": 2,
+    "qwen3-1.7b": 2, "zamba2-1.2b": 8, "whisper-base": 1, "mamba2-130m": 1,
+    "storinfer-paper-8b": 2, "storinfer-paper-1b": 1,
+}
+
+# Megatron-style sequence parallelism on the residual stream for train:
+# halves activation memory (measured qwen3: 6.4 -> 2.9 GB/dev) at the cost
+# of extra gathers around attention — enabled where fitting 16 GB needs it.
+TRAIN_SP = {"starcoder2-7b", "qwen2.5-32b", "qwen2-vl-72b"}
+# NOTE: pinning SSD internals to batch-only sharding was tested and
+# REFUTED (§Perf mamba2 iteration 1: collectives 0.55 -> 1.49 s — GSPMD's
+# speculative seq-sharding of the conv/SSD was net-positive); empty set.
+PREFILL_PIN_SSM: set = set()
+
+# Train-time SSD tile override (exact at any size; smaller tile = smaller
+# intra-chunk (Q x Q) decay buffers in the unrolled-38-layer zamba2 grads).
+TRAIN_SSM_CHUNK = {"zamba2-1.2b": 128}
+# Prefill: the (B, n_chunks, H, Q, Q) intra-chunk decay matrix at Q=256 is
+# ~17 GB/layer at 32k on a single pod; Q=64 is exact and 16x smaller.
+PREFILL_SSM_CHUNK = {"zamba2-1.2b": 64}
+
+FULL_ATTN_FAMILIES = ("dense", "moe", "vlm", "encdec")
+
+
+def skip_reason(cfg, shape) -> Optional[str]:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return "skip(full-attn): 500k decode needs sub-quadratic attention"
+    return None
+
+
+def make_runcfg(cfg, shape, mesh, **overrides) -> M.RunCfg:
+    kind = shape.kind
+    moe_impl = "scatter"
+    if cfg.family == "moe":
+        ep_ok = (mesh is not None and "model" in mesh.axis_names
+                 and cfg.n_experts % mesh.shape["model"] == 0
+                 and kind in ("train", "prefill")
+                 and shape.seq_len % mesh.shape["model"] == 0)
+        moe_impl = "ep" if ep_ok else "einsum"
+    decode_attn = "naive"
+    if (kind == "decode" and mesh is not None
+            and "model" in mesh.axis_names
+            and shape.seq_len % mesh.shape["model"] == 0):
+        decode_attn = "seq_sharded"
+    q_ok, kv_ok = Sh.heads_shardable(cfg, mesh) if mesh is not None \
+        else (False, False)
+    kw = dict(
+        attn_impl="blockwise",
+        schedule="rect",
+        q_block=512 if shape.seq_len >= 4096 else 256,
+        kv_block=1024 if shape.seq_len >= 4096 else 256,
+        moe_impl=moe_impl,
+        moe_group=2048,
+        remat=(kind == "train"),
+        scan_layers=True,
+        decode_attn=decode_attn,
+        mesh=mesh,
+        batch_axes=batch_axes_of(mesh) if mesh is not None else ("data",),
+        heads_sharded=q_ok,
+        repeat_kv=(q_ok and not kv_ok and not cfg.use_mla),
+    )
+    kw.update(overrides)
+    return M.RunCfg(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Input structs
+# ---------------------------------------------------------------------------
+
+
+def batch_struct(cfg, B, S, *, labels=True) -> Dict[str, Any]:
+    sd = jax.ShapeDtypeStruct
+    out = {"tokens": sd((B, S), jnp.int32)}
+    if labels:
+        out["labels"] = sd((B, S), jnp.int32)
+    if cfg.is_encoder_decoder:
+        out["frames"] = sd((B, cfg.encoder_seq, cfg.d_model),
+                           jnp.dtype(cfg.dtype))
+    if cfg.rope_kind == "mrope":
+        out["mrope_positions"] = sd((3, B, S), jnp.int32)
+    return out
+
+
+def params_struct(cfg):
+    return jax.eval_shape(
+        lambda: M.init_model(jax.random.PRNGKey(0), cfg))
+
+
+# ---------------------------------------------------------------------------
+# Cell plan
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CellPlan:
+    arch: str
+    shape_name: str
+    kind: str
+    fn: Any                     # positional fn to jit
+    arg_structs: tuple
+    in_shardings: Any
+    out_shardings: Any
+    cfg: Any
+    run: Any
+    notes: Dict[str, Any]
+    donate: tuple = ()          # donate_argnums (train: params+opt alias)
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, cfg=None,
+               run_overrides=None, accum=None) -> CellPlan:
+    cfg = cfg or get_config(arch)
+    shape = SHAPES[shape_name]
+    run_overrides = dict(run_overrides or {})
+    # "_dp_only": hillclimb sharding mode — no tensor parallelism; the
+    # model axis joins data parallelism (batch/256) with ZeRO-3 param
+    # gathers. Wins when d_model is too small to amortize TP psums.
+    dp_only = run_overrides.pop("_dp_only", False)
+    run = make_runcfg(cfg, shape, mesh, **run_overrides)
+    B, S = shape.global_batch, shape.seq_len
+    if dp_only:
+        run = run.replace(batch_axes=tuple(mesh.axis_names),
+                          heads_sharded=False, repeat_kv=False,
+                          moe_impl="scatter" if cfg.family == "moe"
+                          else run.moe_impl)
+    ps = params_struct(cfg)
+    pspec = Sh.param_specs(ps, mesh, cfg)
+    if dp_only:  # strip "model" from every param spec (FSDP-only)
+        from jax.sharding import PartitionSpec as PS
+
+        def strip(spec):
+            return PS(*[None if ax == "model" else ax for ax in spec])
+
+        pspec = jax.tree_util.tree_map(
+            strip, pspec, is_leaf=lambda x: isinstance(x, PS))
+    pshard = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), pspec)
+    notes: Dict[str, Any] = {"moe_impl": run.moe_impl,
+                             "decode_attn": run.decode_attn,
+                             "heads_sharded": run.heads_sharded,
+                             "repeat_kv": run.repeat_kv}
+
+    if shape.kind == "train":
+        if arch in TRAIN_SP and "seq_parallel" not in run_overrides:
+            run = run.replace(seq_parallel=True)
+            notes["seq_parallel"] = True
+        if accum is None:
+            accum = TRAIN_ACCUM.get(arch, 1)
+            # TRAIN_ACCUM is calibrated for the 512-chip multi-pod mesh;
+            # smaller meshes hold 2x the activations per chip -> scale up,
+            # capped by per-shard batch divisibility.
+            scale = max(1, 512 // max(mesh.size, 1))
+            shards = 1
+            for a in mesh.axis_names:
+                if a != "model":
+                    shards *= mesh.shape[a]
+            accum = min(accum * scale, max(B // shards, 1))
+        notes["accum"] = accum
+        if arch in TRAIN_SSM_CHUNK and (run_overrides or {}).get(
+                "ssm_chunk") is None:
+            run = run.replace(ssm_chunk=TRAIN_SSM_CHUNK[arch])
+            notes["ssm_chunk"] = run.ssm_chunk
+        bs = batch_struct(cfg, B, S)
+        bshard = Sh.batch_shardings(bs, mesh)
+        if dp_only:
+            all_ax = tuple(mesh.axis_names)
+
+            def dp_batch(struct):
+                spec = [None] * len(struct.shape)
+                bdim = 1 if len(struct.shape) == 3 and \
+                    struct.shape[0] == 3 else 0
+                if struct.shape[bdim] % mesh.size == 0:
+                    spec[bdim] = all_ax
+                return NamedSharding(mesh, P(*spec))
+
+            bshard = jax.tree_util.tree_map(dp_batch, bs)
+        os_ = jax.eval_shape(O.init, ps)
+        oshard = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), O.state_specs(pspec))
+        step = T.make_train_step(cfg, run, O.AdamWCfg(), accum=accum)
+        mshard = NamedSharding(mesh, P())
+        return CellPlan(arch, shape_name, "train", step, (ps, os_, bs),
+                        (pshard, oshard, bshard),
+                        (pshard, oshard, mshard), cfg, run, notes,
+                        donate=(0, 1))
+
+    if shape.kind == "prefill":
+        if arch in PREFILL_SSM_CHUNK and (run_overrides or {}).get(
+                "ssm_chunk") is None:
+            run = run.replace(ssm_chunk=PREFILL_SSM_CHUNK[arch])
+            notes["ssm_chunk"] = run.ssm_chunk
+        if arch in PREFILL_PIN_SSM and "pin_ssm" not in run_overrides:
+            run = run.replace(pin_ssm=True)
+            notes["pin_ssm"] = True
+        bs = batch_struct(cfg, B, S, labels=False)
+        bshard = Sh.batch_shardings(bs, mesh)
+        cs = jax.eval_shape(
+            lambda p, b: M.prefill(cfg, p, b, run, max_len=S), ps, bs)[1]
+        cshard = Sh.cache_shardings(cs, mesh)
+        lshard = NamedSharding(mesh, Sh.spec_for(
+            (B, 1, cfg.vocab_size), [Sh.BATCH, Sh.REP, Sh.TP], mesh))
+
+        def fn(params, batch):
+            return M.prefill(cfg, params, batch, run, max_len=S)
+
+        return CellPlan(arch, shape_name, "prefill", fn, (ps, bs),
+                        (pshard, bshard), (lshard, cshard), cfg, run, notes)
+
+    # decode
+    cs = M.cache_struct(cfg, B, S)
+    cshard = Sh.cache_shardings(cs, mesh)
+    tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    tshard = Sh.batch_shardings({"tokens": tok}, mesh)["tokens"]
+    clen = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def fn(params, token, cache, cache_len):
+        return M.serve_step(cfg, params, token, cache, cache_len, None, run,
+                            temperature=0.0)
+
+    return CellPlan(arch, shape_name, "decode", fn, (ps, tok, cs, clen),
+                    (pshard, tshard, cshard, NamedSharding(mesh, P())),
+                    (tshard, cshard), cfg, run, notes,
+                    donate=(2,))  # serving aliases the KV cache in place
+
+
+def probe_depths(cfg):
+    """(cfg_d1, cfg_d2, full_stack, stack_at_d1) for layer extrapolation."""
+    base = cfg.first_dense_layers if cfg.family == "moe" else 0
+    full_stack = cfg.n_layers - base
+    d1 = dataclasses.replace(cfg, n_layers=base + 1)
+    d2 = dataclasses.replace(cfg, n_layers=base + 2)
+    return d1, d2, full_stack, 1

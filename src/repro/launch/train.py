@@ -1,0 +1,124 @@
+"""Training launcher: any assigned arch on any mesh.
+
+Local CPU (real numerics, reduced config):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --smoke \
+      --steps 20
+
+Production posture (on a real v5e pod this is the entry point; XLA flags
+for async collectives are set below):
+  python -m repro.launch.train --arch llama3.2-3b --steps 1000 \
+      --ckpt /ckpts/llama32 [--compress]
+
+Fault tolerance: checkpoints are written asynchronously every
+--ckpt-every steps (mesh-agnostic layout), auto-resume picks up the latest,
+and restores re-shard elastically onto whatever mesh the surviving job
+builds (see training/checkpoint.py + tests/dist_checks.py).
+"""
+import os
+
+# async-collective / overlap flags for real TPU runs (harmless on CPU)
+os.environ.setdefault("LIBTPU_INIT_ARGS", " ".join([
+    "--xla_tpu_enable_async_collective_fusion=true",
+    "--xla_tpu_enable_async_collective_fusion_fuse_all_gather=true",
+    "--xla_tpu_overlap_compute_collective_tc=true",
+]))
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config, reduced
+from repro.distributed import sharding as Sh
+from repro.launch import specs as SP
+from repro.launch.mesh import batch_axes_of, make_local_mesh, \
+    make_production_mesh
+from repro.models import model as M
+from repro.training import checkpoint as CK
+from repro.training import compression as GC
+from repro.training import data as D
+from repro.training import optimizer as O
+from repro.training import train as T
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config + tiny batch (CPU-runnable)")
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--accum", type=int, default=None)
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--compress", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = reduced(cfg)
+        B, S = args.batch or 4, args.seq or 64
+        mesh = None
+        run = M.RunCfg(attn_impl="naive", remat=False)
+        accum = args.accum or 1
+    else:
+        B = args.batch or SHAPES["train_4k"].global_batch
+        S = args.seq or SHAPES["train_4k"].seq_len
+        mesh = make_production_mesh(multi_pod=args.multipod)
+        run = SP.make_runcfg(cfg, SHAPES["train_4k"], mesh)
+        accum = args.accum or SP.TRAIN_ACCUM.get(args.arch, 1)
+
+    print(f"train {cfg.name}: params~{cfg.param_count() / 1e9:.2f}B "
+          f"batch={B}x{S} accum={accum} mesh={mesh and dict(mesh.shape)}")
+
+    compress = None
+    if args.compress:
+        def compress(grads, opt_state):
+            dq, err = GC.compress_grads(grads, opt_state["grad_err"])
+            return dq, dict(opt_state, grad_err=err)
+
+    ocfg = O.AdamWCfg(total_steps=args.steps)
+    step_fn = T.make_train_step(cfg, run, ocfg, accum=accum,
+                                compress=compress)
+    data = D.SyntheticLMData(cfg.vocab_size, B, S)
+
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    opt = O.init(params)
+    if args.compress:
+        opt["grad_err"] = GC.init_error_state(params)
+    if mesh is not None:
+        pshard = Sh.param_shardings(params, mesh, cfg)
+        params = jax.tree_util.tree_map(jax.device_put, params, pshard)
+        step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+    else:
+        step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    ck = CK.Checkpointer(args.ckpt) if args.ckpt else None
+    start = 0
+    if ck and ck.latest_step() is not None:
+        state, meta = ck.restore()
+        params = jax.tree_util.tree_map(jnp.asarray, state["params"])
+        opt = jax.tree_util.tree_map(jnp.asarray, state["opt"])
+        start = meta["step"]
+        print(f"resumed at step {start}")
+
+    t0 = time.time()
+    for i in range(start, args.steps):
+        b = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
+        params, opt, m = step_fn(params, opt, b)
+        if (i + 1) % 10 == 0 or i == start:
+            print(f"step {i + 1} loss={float(m['loss']):.4f} "
+                  f"({(time.time() - t0) / (i - start + 1):.2f}s/step)")
+        if ck and (i + 1) % args.ckpt_every == 0:
+            ck.save(i + 1, {"params": params, "opt": opt})
+    if ck:
+        ck.save(args.steps, {"params": params, "opt": opt}, blocking=True)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

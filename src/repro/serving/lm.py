@@ -1,0 +1,37 @@
+"""TinyJaxLM: the QueryLM interface driven through the REAL JAX engine.
+
+Prompt -> tokens -> chunked sampled decode -> detokenize. With random
+weights the text is gibberish (no pretrained weights ship here), so the
+paper-reproduction benchmarks use the SyntheticOracleLM for semantics —
+this class exists to prove the generator/runtime plumbing runs an actual
+LLM end-to-end (and is what you'd swap real weights into).
+"""
+from __future__ import annotations
+
+from repro.serving.engine import Engine
+
+
+PROMPT = ("you are a user asking questions about the following document. "
+          "do not repeat any of these earlier questions: {masked}. "
+          "document: {chunk}. question:")
+
+
+class TinyJaxLM:
+    def __init__(self, engine: Engine, max_new: int = 12):
+        self.engine = engine
+        self.max_new = max_new
+        self._seed = 0
+
+    def generate_query(self, chunk_text, masked, temperature, rng):
+        chunk = chunk_text.split("\x00", 1)[-1]
+        prompt = PROMPT.format(masked="; ".join(masked[:8]), chunk=chunk)
+        self._seed += 1
+        return self.engine.generate(prompt, max_new=self.max_new,
+                                    temperature=float(temperature),
+                                    seed=self._seed)
+
+    def answer(self, query, chunk_text):
+        chunk = chunk_text.split("\x00", 1)[-1]
+        prompt = f"document: {chunk}. question: {query}. answer:"
+        return self.engine.generate(prompt, max_new=self.max_new,
+                                    temperature=None, seed=0)

@@ -1,0 +1,113 @@
+"""AdamW with f32 master params, sharded like the model (ZeRO-3 style).
+
+Optimizer state = {master (f32 copy of params), m, v (f32), step (i32)}.
+Every state leaf inherits the param's PartitionSpec, so m/v/master shard
+identically to the weights (no replicated optimizer memory). The model
+params stay bf16 (compute dtype); ``update`` writes them as a cast of the
+f32 master after the Adam step — the standard mixed-precision recipe.
+
+Optional int8 gradient compression with error feedback lives in
+``repro.training.compression`` and is applied to the gradient pytree before
+``update`` (off for baselines).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWCfg:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    schedule: str = "cosine"          # cosine | constant
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def lr_at(ocfg: AdamWCfg, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(ocfg.warmup_steps, 1), 1.0)
+    if ocfg.schedule == "constant":
+        return ocfg.lr * warm
+    prog = jnp.clip((step - ocfg.warmup_steps)
+                    / jnp.maximum(ocfg.total_steps - ocfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return ocfg.lr * warm * (ocfg.min_lr_frac + (1 - ocfg.min_lr_frac) * cos)
+
+
+def init(params):
+    f32 = lambda p: p.astype(jnp.float32)
+    z32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "master": jax.tree_util.tree_map(f32, params),
+        "m": jax.tree_util.tree_map(z32, params),
+        "v": jax.tree_util.tree_map(z32, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                        for g in jax.tree_util.tree_leaves(tree)))
+
+
+def update(ocfg: AdamWCfg, grads, state, params):
+    """Returns (new_params (param dtype), new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, ocfg.clip_norm / jnp.maximum(gnorm, 1e-12)) \
+        if ocfg.clip_norm else jnp.float32(1.0)
+    lr = lr_at(ocfg, step)
+    b1, b2 = ocfg.b1, ocfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def one(g, m, v, master, p):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        upd = (m / bc1) / (jnp.sqrt(v / bc2) + ocfg.eps)
+        # decoupled weight decay on matrices only (skip vectors/scalars)
+        if master.ndim >= 2:
+            upd = upd + ocfg.weight_decay * master
+        master = master - lr * upd
+        return m, v, master, master.astype(p.dtype)
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_w = treedef.flatten_up_to(state["master"])
+    flat_p = treedef.flatten_up_to(params)
+    out = [one(*t) for t in zip(flat_g, flat_m, flat_v, flat_w, flat_p)]
+    new_state = {
+        "m": jax.tree_util.tree_unflatten(treedef, [o[0] for o in out]),
+        "v": jax.tree_util.tree_unflatten(treedef, [o[1] for o in out]),
+        "master": jax.tree_util.tree_unflatten(treedef, [o[2] for o in out]),
+        "step": step,
+    }
+    for k in state:  # carry through extra state (e.g. compression error fb)
+        if k not in new_state:
+            new_state[k] = state[k]
+    new_params = jax.tree_util.tree_unflatten(treedef, [o[3] for o in out])
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def state_specs(param_specs_tree):
+    """PartitionSpec tree for the optimizer state given the param specs."""
+    from jax.sharding import PartitionSpec as P
+    return {
+        "master": param_specs_tree,
+        "m": param_specs_tree,
+        "v": param_specs_tree,
+        "step": P(),
+    }

@@ -1,0 +1,177 @@
+"""StorInfer core tests: generator invariants (hypothesis), store roundtrip,
+index exactness, metrics properties, runtime hit/miss/cancellation."""
+import tempfile
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import metrics as MX
+from repro.core.embedder import HashEmbedder
+from repro.core.generator import (GenCfg, QueryGenerator, SyntheticOracleLM,
+                                  chunk_key)
+from repro.core.index import FlatIndex, IVFIndex
+from repro.core.kb import build_kb, sample_user_queries
+from repro.core.store import PrecomputedStore
+from repro.core.tokenizer import Tokenizer
+
+
+@pytest.fixture(scope="module")
+def kb_env():
+    kb = build_kb("squad", n_docs=8)
+    emb = HashEmbedder()
+    tok = Tokenizer.from_texts([d.text() for d in kb.docs])
+    chunks = [chunk_key(d.doc_id, d.text()) for d in kb.docs]
+    return kb, emb, tok, chunks
+
+
+# ---------------------------------------------------------------------------
+# Generator (§3.2)
+# ---------------------------------------------------------------------------
+
+
+def test_dedup_invariant_no_near_duplicates(kb_env):
+    kb, emb, tok, chunks = kb_env
+    gen = QueryGenerator(SyntheticOracleLM(kb), emb, tok, GenCfg(dedup=True))
+    qs, rs, es, stats = gen.generate(chunks, 150, seed=0)
+    sims = es @ es.T - np.eye(len(es))
+    assert sims.max() < 0.99, "accepted pair above S_th_Gen"
+    assert stats.discarded > 0, "dedup never triggered (test too easy)"
+
+
+def test_random_baseline_has_duplicates(kb_env):
+    kb, emb, tok, chunks = kb_env
+    gen = QueryGenerator(SyntheticOracleLM(kb), emb, tok,
+                         GenCfg(dedup=False))
+    qs, _, es, stats = gen.generate(chunks, 150, seed=0)
+    assert stats.discarded == 0
+    sims = es @ es.T - np.eye(len(es))
+    assert sims.max() >= 0.99, "random generation produced no duplicates?"
+
+
+def test_adaptive_sampling_raises_temperature(kb_env):
+    kb, emb, tok, chunks = kb_env
+    gen = QueryGenerator(SyntheticOracleLM(kb), emb, tok, GenCfg(dedup=True))
+    _, _, _, stats = gen.generate(chunks, 200, seed=1)
+    assert stats.temp_final > 0.7, "temperature never increased"
+    assert stats.temp_final <= 1.0 + 1e-9, "temperature exceeded cap"
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(64, 512), st.lists(st.integers(1, 60), min_size=0,
+                                      max_size=30))
+def test_masking_budget_property(max_ctx, q_lens):
+    """Adaptive query masking: only COMPLETE queries, never over budget."""
+    kb = build_kb("squad", n_docs=2)
+    tok = Tokenizer.from_texts([d.text() for d in kb.docs])
+    gen = QueryGenerator(SyntheticOracleLM(kb), HashEmbedder(), tok,
+                         GenCfg(max_ctx=max_ctx))
+    chunk = chunk_key(0, kb.docs[0].text())
+    recent = [" ".join(["word"] * n) for n in q_lens]
+    chosen = gen.select_masked(recent, chunk)
+    budget = max_ctx - tok.count(chunk) - gen.cfg.scaffold_tokens
+    assert sum(tok.count(q) for q in chosen) <= max(budget, 0)
+    for q in chosen:
+        assert q in recent
+
+
+# ---------------------------------------------------------------------------
+# Store
+# ---------------------------------------------------------------------------
+
+
+def test_store_roundtrip_and_reopen(kb_env, tmp_path):
+    kb, emb, tok, chunks = kb_env
+    store = PrecomputedStore(tmp_path / "s", dim=384)
+    qs = ["what is a?", "what is b?", "tell me c"]
+    rs = ["a is 1.", "b is 2.", "c is 3."]
+    store.add_batch(emb.encode(qs), qs, rs)
+    store.flush()
+    st2 = PrecomputedStore.open_(tmp_path / "s")
+    assert st2.count == 3
+    for i, (q, r) in enumerate(zip(qs, rs)):
+        assert st2.get_pair(i) == (q, r)
+    e = st2.embeddings()
+    assert e.shape == (3, 384)
+    sb = st2.storage_bytes()
+    assert sb["index_bytes"] > 0 and sb["metadata_bytes"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Indexes
+# ---------------------------------------------------------------------------
+
+
+def test_ivf_recall_close_to_flat():
+    # clustered data (the regime IVF is built for — query embeddings of
+    # paraphrase families cluster tightly)
+    rng = np.random.default_rng(0)
+    centers = rng.normal(size=(32, 64)).astype(np.float32)
+    x = (centers[rng.integers(0, 32, 2000)]
+         + 0.15 * rng.normal(size=(2000, 64)).astype(np.float32))
+    x /= np.linalg.norm(x, axis=1, keepdims=True)
+    q = x[rng.choice(2000, 50)] + 0.02 * rng.normal(size=(50, 64)).astype(
+        np.float32)
+    flat = FlatIndex(x)
+    ivf = IVFIndex(x, n_lists=32, nprobe=8)
+    vf, idf = flat.search(q, 10)
+    vi, idi = ivf.search(q, 10)
+    recall = np.mean([len(set(a) & set(b)) / 10
+                      for a, b in zip(idf, idi)])
+    assert recall > 0.8, recall
+
+
+def test_flat_index_kernel_path_matches():
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(300, 48)).astype(np.float32)
+    q = rng.normal(size=(4, 48)).astype(np.float32)
+    v1, i1 = FlatIndex(x).search(q, 5)
+    v2, i2 = FlatIndex(x, use_kernel=True).search(q, 5)
+    np.testing.assert_allclose(v1, v2, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Metrics
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_known_values():
+    assert MX.unigram_f1("a b c", "a b c") == 1.0
+    assert MX.unigram_f1("a b", "c d") == 0.0
+    assert MX.rouge_l_f1("the cat sat", "the cat sat") == 1.0
+    assert 0 < MX.rouge_l_f1("the cat sat down", "the cat lay down") < 1.0
+    assert MX.bert_score_f1("hello world", "hello world") > 0.99
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.text("abcde ", min_size=1, max_size=30),
+       st.text("abcde ", min_size=1, max_size=30))
+def test_metrics_bounded(a, b):
+    for m in (MX.unigram_f1, MX.rouge_l_f1):
+        v = m(a, b)
+        assert -1e-9 <= v <= 1 + 1e-9
+        assert abs(m(a, b) - m(b, a)) < 1e-9  # F1 symmetric
+
+
+# ---------------------------------------------------------------------------
+# Hit-rate sanity: dedup beats random at equal store size (Table 1 trend)
+# ---------------------------------------------------------------------------
+
+
+def test_dedup_beats_random_hit_rate(kb_env):
+    kb, emb, tok, chunks = kb_env
+    user = sample_user_queries(kb, 400, seed=7)
+    rates, distinct = {}, {}
+    for dedup in (False, True):
+        gen = QueryGenerator(SyntheticOracleLM(kb), emb, tok,
+                             GenCfg(dedup=dedup))
+        qs, rs, es, _ = gen.generate(chunks, 400, seed=2)
+        idx = FlatIndex(es)
+        ue = emb.encode([q for q, _ in user])
+        v, _ = idx.search(ue, 1)
+        rates[dedup] = float(np.mean(v[:, 0] >= 0.9))
+        distinct[dedup] = len(set(qs))
+    # coverage strictly improves; hit rate within statistical tolerance at
+    # this small store size (benchmarks/table1 checks the 8k-pair regime)
+    assert distinct[True] >= distinct[False], distinct
+    assert rates[True] >= rates[False] - 0.02, rates

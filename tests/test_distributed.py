@@ -1,0 +1,18 @@
+"""Runs the multi-device checks (tests/dist_checks.py) in a subprocess with
+8 forced host devices — the main pytest process keeps its single device."""
+import pathlib
+import subprocess
+import sys
+
+
+def test_distributed_checks():
+    script = pathlib.Path(__file__).parent / "dist_checks.py"
+    env = {"PYTHONPATH": str(pathlib.Path(__file__).parents[1] / "src"),
+           "PATH": "/usr/bin:/bin"}
+    import os
+    env.update({k: v for k, v in os.environ.items()
+                if k not in env and k != "XLA_FLAGS"})
+    res = subprocess.run([sys.executable, str(script)], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, res.stdout[-3000:] + res.stderr[-3000:]
+    assert "ALL DISTRIBUTED CHECKS PASSED" in res.stdout
