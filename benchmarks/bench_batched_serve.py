@@ -1,0 +1,151 @@
+"""Batched StorInfer serving throughput: sequential one-query-at-a-time
+(`StorInferRuntime.query`, the paper's Fig-2 loop) vs the batched runtime
+(`BatchedRuntime.query_batch`) on the SAME synthetic store.
+
+Amortization is the whole story: one embedding batch + one MIPS dispatch
+per microbatch instead of per query. Emits a BENCH_batched_serve.json
+point with queries/sec, p50/p99 latency, and the batched/sequential
+speedup (acceptance floor: >= 4x at batch 32).
+
+  PYTHONPATH=src python benchmarks/bench_batched_serve.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parents[1]
+for p in (str(_ROOT), str(_ROOT / "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+import numpy as np
+
+from benchmarks.common import out_write
+from repro.core.embedder import HashEmbedder
+from repro.core.index import auto_index, select_tier
+from repro.core.runtime import (BatchedRuntime, BatchedRuntimeCfg,
+                                RuntimeCfg, StorInferRuntime)
+from repro.core.store import PrecomputedStore
+
+
+def build_synth_store(root, emb, n_rows: int, batch: int = 2048):
+    """Synthetic query/response pairs; embeddings from the real embedder so
+    sequential and batched paths search identical data."""
+    store = PrecomputedStore(root, dim=emb.dim)
+    for lo in range(0, n_rows, batch):
+        hi = min(lo + batch, n_rows)
+        qs = [f"synthetic question {i} about topic {i % 97} and "
+              f"entity {i % 31}" for i in range(lo, hi)]
+        rs = [f"stored answer number {i}." for i in range(lo, hi)]
+        store.add_batch(emb.encode(qs), qs, rs)
+    store.flush()
+    return store
+
+
+def user_queries(n: int, n_store: int, hit_frac: float = 0.5, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for j in range(n):
+        if rng.random() < hit_frac:
+            i = int(rng.integers(0, n_store))
+            out.append(f"synthetic question {i} about topic {i % 97} and "
+                       f"entity {i % 31}")
+        else:
+            out.append(f"novel unseen query {j} zebra {rng.integers(1e6)}")
+    return out
+
+
+def pcts(lat_s):
+    a = np.asarray(lat_s)
+    return {"p50_ms": float(np.percentile(a, 50) * 1e3),
+            "p99_ms": float(np.percentile(a, 99) * 1e3),
+            "mean_ms": float(a.mean() * 1e3)}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small store/query count for CI")
+    ap.add_argument("--n-store", type=int, default=None)
+    ap.add_argument("--n-queries", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=32)
+    args = ap.parse_args(argv)
+
+    n_store = args.n_store or (2000 if args.smoke else 20000)
+    n_q = args.n_queries or (128 if args.smoke else 512)
+    B = args.batch
+
+    emb = HashEmbedder()
+    with tempfile.TemporaryDirectory() as td:
+        store = build_synth_store(td, emb, n_store)
+        index = auto_index(store)
+        tier = select_tier(store.count)
+        queries = user_queries(n_q, n_store)
+
+        # warm the jit caches on both paths before timing
+        seq_rt = StorInferRuntime(index, store, emb, engine=None,
+                                  cfg=RuntimeCfg(s_th_run=0.9))
+        bat_rt = BatchedRuntime(index, store, emb, engine=None,
+                                cfg=BatchedRuntimeCfg(s_th_run=0.9,
+                                                      max_batch=B))
+        seq_rt.query(queries[0])
+        bat_rt.query_batch(queries[:B])
+
+        # -- sequential: the paper's one-at-a-time race loop ---------------
+        seq_lat = []
+        t0 = time.perf_counter()
+        seq_hits = 0
+        for q in queries:
+            t1 = time.perf_counter()
+            r = seq_rt.query(q)
+            seq_lat.append(time.perf_counter() - t1)
+            seq_hits += int(r.hit)
+        seq_total = time.perf_counter() - t0
+        seq_qps = n_q / seq_total
+
+        # -- batched: microbatches of B through one index dispatch ---------
+        bat_lat = []
+        t0 = time.perf_counter()
+        bat_hits = 0
+        for lo in range(0, n_q, B):
+            chunk = queries[lo:lo + B]
+            t1 = time.perf_counter()
+            rs = bat_rt.query_batch(chunk)
+            dt = time.perf_counter() - t1
+            bat_lat.extend([dt] * len(chunk))   # each request waits its batch
+            bat_hits += sum(r.hit for r in rs)
+        bat_total = time.perf_counter() - t0
+        bat_qps = n_q / bat_total
+
+        assert seq_hits == bat_hits, (seq_hits, bat_hits)
+        speedup = bat_qps / seq_qps
+        payload = {
+            "n_store": n_store, "n_queries": n_q, "batch": B,
+            "index_tier": tier, "hit_rate": seq_hits / n_q,
+            "sequential": {"qps": seq_qps, **pcts(seq_lat)},
+            "batched": {"qps": bat_qps, **pcts(bat_lat)},
+            "speedup_qps": speedup,
+            "smoke": bool(args.smoke),
+        }
+        out_write("BENCH_batched_serve", payload)
+        print(f"store={n_store} ({tier})  queries={n_q}  batch={B}")
+        print(f"sequential: {seq_qps:8.1f} q/s  "
+              f"p50={payload['sequential']['p50_ms']:.2f}ms "
+              f"p99={payload['sequential']['p99_ms']:.2f}ms")
+        print(f"batched:    {bat_qps:8.1f} q/s  "
+              f"p50={payload['batched']['p50_ms']:.2f}ms "
+              f"p99={payload['batched']['p99_ms']:.2f}ms")
+        print(f"speedup: {speedup:.1f}x (floor 4x)")
+        if speedup < 4.0:
+            print("WARNING: batched speedup below the 4x acceptance floor",
+                  file=sys.stderr)
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -10,8 +10,8 @@ from __future__ import annotations
 import sys
 import time
 
-from benchmarks import (fig3_latency, fig4_scaling, gen_cost,
-                        table1_hitrate, table2_threshold, roofline)
+from benchmarks import (bench_batched_serve, fig3_latency, fig4_scaling,
+                        gen_cost, table1_hitrate, table2_threshold, roofline)
 
 BENCHES = {
     "fig3": fig3_latency.main,
@@ -20,6 +20,7 @@ BENCHES = {
     "fig4": fig4_scaling.main,
     "gen_cost": gen_cost.main,
     "roofline": roofline.main,
+    "batched_serve": lambda: bench_batched_serve.main([]),
 }
 
 

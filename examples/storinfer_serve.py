@@ -1,6 +1,8 @@
 """End-to-end StorInfer serving: a REAL JAX LM behind the runtime, with
-parallel vector search and chunked-decode hit-cancellation (Fig 2), plus
-the continuous-batching scheduler path.
+parallel vector search and chunked-decode hit-cancellation (Fig 2), the
+continuous-batching scheduler path, and the batched serving runtime
+(microbatched admission -> one embed + one MIPS search + one batched
+decode, hit slots cancelled mid-flight).
 
   PYTHONPATH=src python examples/storinfer_serve.py
 """
@@ -20,7 +22,8 @@ from repro.core.generator import (GenCfg, QueryGenerator, SyntheticOracleLM,
                                   chunk_key)
 from repro.core.index import FlatIndex
 from repro.core.kb import build_kb, sample_user_queries
-from repro.core.runtime import RuntimeCfg, StorInferRuntime
+from repro.core.runtime import (BatchedRuntime, BatchedRuntimeCfg,
+                                RuntimeCfg, StorInferRuntime)
 from repro.core.store import PrecomputedStore
 from repro.core.tokenizer import Tokenizer
 from repro.models import model as M
@@ -67,6 +70,21 @@ def main():
         for r in sorted(done, key=lambda r: r.rid):
             print(f"req {r.rid}: cancelled={r.cancelled} "
                   f"tokens={len(r.out_ids)}")
+
+        print("=== batched StorInfer runtime (auto-tiered index) ===")
+        with BatchedRuntime.from_store(
+                store, emb, engine=engine,
+                cfg=BatchedRuntimeCfg(s_th_run=0.9, max_batch=8,
+                                      max_wait_s=0.02)) as brt:
+            futs = [brt.submit(q, max_new=8) for q, _ in user]
+            for (q, _), f in zip(user, futs):
+                r = f.result(timeout=120)
+                print(f"[{r.source:5s} hit={r.hit} "
+                      f"cancelled={r.cancelled}] {q!r}")
+            s = brt.stats
+            print(f"stats: {s.queries} queries, {s.hits} hits "
+                  f"({s.hit_rate:.0%}), {s.llm_cancelled} decodes "
+                  f"hit-cancelled, {s.batches} microbatches")
 
 
 if __name__ == "__main__":

@@ -8,7 +8,8 @@ Subsystems (paper section in parens):
   index      — MIPS indexes: flat / IVF / mesh-sharded (§2 vector search)
   generator  — deduplicated query generation: adaptive query masking +
                adaptive sampling (§3.2)
-  runtime    — parallel search + cancellable LLM inference (§3.4, Fig 2)
+  runtime    — parallel search + cancellable LLM inference (§3.4, Fig 2);
+               BatchedRuntime batches admission/search/decode for serving
   metrics    — Unigram F1 / ROUGE-L / BERTScore-proxy (§4)
   latency    — analytic latency models for the paper's H100 point + v5e
 """

@@ -1,17 +1,20 @@
 """MIPS indexes over the precomputed-query embeddings.
 
-TPU adaptation of the paper's DiskANN (see DESIGN.md §3): graph-ANN
-pointer-chasing is hostile to the MXU/HBM burst model, so the index is a
-batched tiled MIPS scan — a matmul, the single most roofline-friendly op on
-the platform — with IVF coarse pruning for sub-linear probes and a
-mesh-sharded variant (rows over "model", distributed top-k) for pod-scale
-stores.
+TPU adaptation of the paper's DiskANN: graph-ANN pointer-chasing is
+hostile to the MXU/HBM burst model, so the index is a batched tiled MIPS
+scan — a matmul, the single most roofline-friendly op on the platform —
+with IVF coarse pruning for sub-linear probes and a mesh-sharded variant
+(rows over "model", distributed top-k) for pod-scale stores.
 
   FlatIndex    — exact brute MIPS (jnp matmul + top_k; the Pallas
                  ``mips_topk`` kernel implements the same contract on TPU).
   IVFIndex     — k-means coarse quantizer, scans nprobe lists.
   ShardedIndex — rows sharded over a mesh axis, local top-k + all-gather
                  combine (repro.distributed.topk).
+
+``auto_index`` picks between the three from store size and mesh
+availability (see ``select_tier`` for the exact boundaries) so callers —
+the batched runtime in particular — never hard-code a tier.
 """
 from __future__ import annotations
 
@@ -86,6 +89,7 @@ class IVFIndex:
     def __init__(self, embs: np.ndarray, n_lists: int = 64, nprobe: int = 8,
                  seed: int = 0):
         x = jnp.asarray(np.asarray(embs, np.float32))
+        self.n_total = int(x.shape[0])
         self.nprobe = min(nprobe, n_lists)
         self.n_lists = n_lists
         cent, assign = kmeans(x, n_lists, seed=seed)
@@ -125,10 +129,34 @@ class IVFIndex:
         v, i = self._search(q, k)
         return np.asarray(v), np.asarray(i)
 
-    def recall_vs_flat(self, queries, k=10) -> float:
-        flat = FlatIndex(np.asarray(self.lists).reshape(-1, 0)) \
-            if False else None  # pragma: no cover
-        raise NotImplementedError  # use tests/test_index.py helper instead
+    def __len__(self):
+        return self.n_total
+
+    def reconstruct(self) -> np.ndarray:
+        """The indexed rows, (N, D), rebuilt from the padded list layout
+        (row order restored from the stored ids)."""
+        lists = np.asarray(self.lists)
+        ids = np.asarray(self.ids)
+        out = np.zeros((self.n_total, lists.shape[-1]), np.float32)
+        valid = ids >= 0
+        out[ids[valid]] = lists[valid]
+        return out
+
+    def recall_vs_flat(self, queries, k: int = 10) -> float:
+        """Mean recall@k of this IVF index against an exact flat scan over
+        the same rows. 1.0 means the nprobe pruning lost nothing for these
+        queries; ``auto_index`` callers use this to validate an IVF choice.
+
+        The flat reference is built on demand from ``reconstruct()`` and
+        discarded — this is a diagnostic, not a serving path, so the index
+        doesn't pay a permanent 2x memory cost for it.
+        """
+        q = np.asarray(queries, np.float32)
+        _, flat_ids = FlatIndex(self.reconstruct()).search(q, k)
+        _, ivf_ids = self.search(q, k)
+        hits = [len(set(f.tolist()) & set(i.tolist())) / k
+                for f, i in zip(flat_ids, ivf_ids)]
+        return float(np.mean(hits))
 
 
 class ShardedIndex:
@@ -155,3 +183,77 @@ class ShardedIndex:
         v, i = sharded_mips_topk(q, self.embs, k, mesh=self.mesh,
                                  shard_axis=self.shard_axis)
         return np.asarray(v), np.asarray(i)
+
+    def __len__(self):
+        return self.n_real
+
+
+# ---------------------------------------------------------------------------
+# Tier auto-selection
+# ---------------------------------------------------------------------------
+
+# Below this row count an exact flat scan is one small matmul and beats any
+# pruning overhead; above it IVF's nprobe/n_lists scan fraction wins. The
+# paper's 150K-pair store lands in the IVF tier.
+FLAT_MAX_ROWS = 32768
+# Sharding only pays once each shard is a non-trivial scan.
+SHARD_MIN_ROWS = 4 * FLAT_MAX_ROWS
+
+
+def select_tier(n_rows: int, mesh_axis_size: int = 1, *,
+                flat_max_rows: int = FLAT_MAX_ROWS,
+                shard_min_rows: int = SHARD_MIN_ROWS) -> str:
+    """Pure tier decision: ``"flat" | "ivf" | "sharded"``.
+
+    Separated from ``auto_index`` so the boundary logic is unit-testable
+    without building real indexes (or a real multi-device mesh).
+    """
+    if n_rows <= 0:
+        raise ValueError("cannot index an empty store")
+    if mesh_axis_size > 1 and n_rows >= shard_min_rows:
+        return "sharded"
+    if n_rows <= flat_max_rows:
+        return "flat"
+    return "ivf"
+
+
+def ivf_params(n_rows: int) -> Tuple[int, int]:
+    """(n_lists, nprobe) heuristic: sqrt-N lists, probe ~1/8 of them (at
+    least 8) — keeps the scanned fraction roughly constant as N grows."""
+    n_lists = max(16, int(round(float(n_rows) ** 0.5)))
+    nprobe = max(8, n_lists // 8)
+    return n_lists, min(nprobe, n_lists)
+
+
+def auto_index(store, mesh=None, *, shard_axis: str = "model",
+               use_kernel: Optional[bool] = None,
+               flat_max_rows: int = FLAT_MAX_ROWS,
+               shard_min_rows: int = SHARD_MIN_ROWS, seed: int = 0):
+    """Build the right index tier for ``store`` (a PrecomputedStore, or any
+    object with ``.embeddings()``, or a raw (N, D) array).
+
+    ``use_kernel=None`` routes the flat scan through the Pallas mips_topk
+    kernel when running on a real TPU and keeps the plain jnp path (faster
+    than interpret mode) on CPU.
+    """
+    if hasattr(store, "embeddings"):
+        embs = np.asarray(store.embeddings(), np.float32)
+    else:
+        embs = np.asarray(store, np.float32)
+    axis_size = 1
+    if mesh is not None:
+        try:
+            axis_size = int(mesh.shape[shard_axis])
+        except (KeyError, TypeError):
+            axis_size = 1
+    tier = select_tier(embs.shape[0], axis_size,
+                       flat_max_rows=flat_max_rows,
+                       shard_min_rows=shard_min_rows)
+    if tier == "sharded":
+        return ShardedIndex(embs, mesh, shard_axis=shard_axis)
+    if tier == "ivf":
+        n_lists, nprobe = ivf_params(embs.shape[0])
+        return IVFIndex(embs, n_lists=n_lists, nprobe=nprobe, seed=seed)
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    return FlatIndex(embs, use_kernel=use_kernel)

@@ -9,13 +9,25 @@ If (a) returns a match with similarity >= S_th_Run, the stored response is
 returned immediately and a termination signal cancels (b) at the next chunk
 boundary — a miss therefore costs exactly the plain-LLM latency (the decode
 ran unimpeded the whole time).
+
+Two runtimes share that structure:
+
+  StorInferRuntime — the paper's one-query-at-a-time race (kept as the
+      reference implementation and the sequential benchmark baseline).
+  BatchedRuntime   — the serving path: admits many concurrent queries,
+      embeds + MIPS-searches them as ONE batch through the index (Pallas
+      ``mips_topk`` on TPU), races that against ONE batched decode, cancels
+      the hit slots, and lets only the misses finish on the LLM. §3.1
+      ``add_misses`` write-back is batched too, with periodic store flush +
+      index-tier rebuild via ``auto_index``.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
-from concurrent.futures import ThreadPoolExecutor
-from typing import Optional
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import List, Optional, Sequence, Union
 
 
 @dataclasses.dataclass
@@ -29,6 +41,7 @@ class QueryResult:
     llm_s: float
     latency_s: float
     chunks_run: int = 0
+    cancelled: bool = False   # an LLM decode was started and hit-cancelled
 
 
 @dataclasses.dataclass
@@ -113,3 +126,202 @@ class StorInferRuntime:
         e = self.embedder.encode(list(texts))
         v, i = self.index.search(e, k)
         return v, i, time.perf_counter() - t0
+
+
+# ---------------------------------------------------------------------------
+# Batched serving runtime
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class BatchedRuntimeCfg:
+    s_th_run: float = 0.9
+    max_batch: int = 32        # microbatch ceiling for the admission queue
+    max_wait_s: float = 0.005  # admission window after the first arrival
+    add_misses: bool = False   # §3.1 write-back of fresh (query, response)
+    rebuild_every: int = 256   # write-backs between flush + index rebuild
+    engine_slots: Optional[int] = None  # decode slots (None: one per query)
+
+
+@dataclasses.dataclass
+class RuntimeStats:
+    """Serving counters; ``llm_cancelled`` is the hit-cancellation
+    accounting — decodes that were started and then killed by a store hit."""
+    queries: int = 0
+    hits: int = 0
+    misses: int = 0
+    llm_cancelled: int = 0
+    batches: int = 0
+    writebacks: int = 0
+    index_rebuilds: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.queries if self.queries else 0.0
+
+
+class BatchedRuntime:
+    """Batched StorInfer serving: one embed + one MIPS search + one batched
+    decode per microbatch, hit slots cancelled mid-flight.
+
+    ``index`` may be any of FlatIndex/IVFIndex/ShardedIndex; use
+    ``BatchedRuntime.from_store`` to let ``auto_index`` pick the tier.
+    ``engine=None`` runs search-only (misses return empty responses).
+    """
+
+    def __init__(self, index, store, embedder, engine=None,
+                 cfg: BatchedRuntimeCfg = None, mesh=None,
+                 auto_index_kw: Optional[dict] = None):
+        self.index = index
+        self.store = store
+        self.embedder = embedder
+        self.engine = engine
+        self.cfg = cfg or BatchedRuntimeCfg()
+        self.mesh = mesh
+        self._auto_index_kw = dict(auto_index_kw or {})
+        self.stats = RuntimeStats()
+        self._pool = ThreadPoolExecutor(max_workers=2)
+        self._batcher = None
+        self._batcher_lock = threading.Lock()
+        self._pending_writebacks = 0
+
+    @classmethod
+    def from_store(cls, store, embedder, engine=None,
+                   cfg: BatchedRuntimeCfg = None, mesh=None,
+                   **auto_index_kw) -> "BatchedRuntime":
+        from repro.core.index import auto_index
+        return cls(auto_index(store, mesh, **auto_index_kw), store,
+                   embedder, engine, cfg=cfg, mesh=mesh,
+                   auto_index_kw=auto_index_kw)
+
+    # -- the search half ------------------------------------------------------
+    def _search_batch(self, texts: List[str]):
+        t0 = time.perf_counter()
+        embs = self.embedder.encode(texts)
+        v, i = self.index.search(embs, 1)
+        return v[:, 0], i[:, 0], embs, time.perf_counter() - t0
+
+    # -- synchronous batched query path ---------------------------------------
+    def query_batch(self, texts: Sequence[str], *,
+                    max_new: Union[int, Sequence[int]] = 32,
+                    temperature=None) -> List[QueryResult]:
+        texts = list(texts)
+        if not texts:
+            return []
+        t0 = time.perf_counter()
+        fut = self._pool.submit(self._search_batch, texts)
+
+        session = None
+        if self.engine is not None:
+            session = self.engine.start_batch_session(
+                texts, max_new=max_new, temperature=temperature,
+                batch_size=self.cfg.engine_slots)
+
+        # race: batched decode vs batched search (Fig 2, amortized)
+        search = None
+        while session is not None and not session.done:
+            if fut.done():
+                search = fut.result()
+                for qi, s in enumerate(search[0]):
+                    if s >= self.cfg.s_th_run:
+                        session.cancel(qi)   # termination signal per slot
+                break                        # misses keep decoding below
+            session.step_chunk()
+        if search is None:
+            search = fut.result()
+        scores, rows, embs, search_s = search
+        cancelled_rids = set()
+        if session is not None:
+            session.run()                    # only miss slots still live
+            # a cancel only saved decode work if the request had actually
+            # entered a decode wave (slot assigned); cancelled-while-waiting
+            # or finished-before-cancel don't count
+            cancelled_rids = {r.rid for r in session.results()
+                              if r.cancelled and r.slot >= 0}
+
+        results: List[QueryResult] = []
+        miss_idx: List[int] = []
+        llm_s = session.decode_s if session is not None else 0.0
+        chunks = session.chunks_run if session is not None else 0
+        latency = time.perf_counter() - t0
+        for qi, text in enumerate(texts):
+            score = float(scores[qi])
+            if score >= self.cfg.s_th_run:
+                mq, resp = self.store.get_pair(int(rows[qi]))
+                results.append(QueryResult(
+                    response=resp, source="store", hit=True, score=score,
+                    matched_query=mq, search_s=search_s, llm_s=llm_s,
+                    latency_s=latency, chunks_run=chunks,
+                    cancelled=qi in cancelled_rids))
+            else:
+                miss_idx.append(qi)
+                resp = session.text(qi) if session is not None else ""
+                results.append(QueryResult(
+                    response=resp, source="llm", hit=False, score=score,
+                    matched_query=None, search_s=search_s, llm_s=llm_s,
+                    latency_s=latency, chunks_run=chunks))
+
+        n_hits = len(texts) - len(miss_idx)
+        self.stats.queries += len(texts)
+        self.stats.hits += n_hits
+        self.stats.misses += len(miss_idx)
+        self.stats.batches += 1
+        self.stats.llm_cancelled += len(cancelled_rids)
+
+        if (self.cfg.add_misses and session is not None and miss_idx):
+            import numpy as np
+            self.store.add_batch(
+                np.asarray(embs)[miss_idx],
+                [texts[qi] for qi in miss_idx],
+                [results[qi].response for qi in miss_idx])
+            self.stats.writebacks += len(miss_idx)
+            self._pending_writebacks += len(miss_idx)
+            if self._pending_writebacks >= self.cfg.rebuild_every:
+                self.flush_and_rebuild()
+        return results
+
+    def flush_and_rebuild(self):
+        """Persist pending write-backs and rebuild the index over the grown
+        store — ``auto_index`` re-picks the tier, so a store that outgrew
+        the flat boundary comes back as IVF (or Sharded on a mesh)."""
+        from repro.core.index import auto_index
+        self.store.flush()
+        self.index = auto_index(self.store, self.mesh,
+                                **self._auto_index_kw)
+        self.stats.index_rebuilds += 1
+        self._pending_writebacks = 0
+
+    # -- async admission (the serving front door) -----------------------------
+    def serve(self):
+        """Start (or return) the MicroBatcher admission queue. Safe to call
+        from many threads — ``submit`` races here on first use, and two
+        batchers would interleave reads on the shared store handle."""
+        from repro.serving.scheduler import MicroBatcher
+        with self._batcher_lock:
+            if self._batcher is None:
+                self._batcher = MicroBatcher(
+                    self._process_submissions, max_batch=self.cfg.max_batch,
+                    max_wait_s=self.cfg.max_wait_s).start()
+            return self._batcher
+
+    def _process_submissions(self, subs):
+        return self.query_batch([s.text for s in subs],
+                                max_new=[s.max_new for s in subs])
+
+    def submit(self, text: str, *, max_new: int = 32) -> Future:
+        """Enqueue one query; resolves to its QueryResult once its
+        microbatch is processed."""
+        return self.serve().submit(text, max_new=max_new)
+
+    def close(self):
+        if self._batcher is not None:
+            self._batcher.stop()
+            self._batcher = None
+        self._pool.shutdown(wait=False)
+
+    def __enter__(self) -> "BatchedRuntime":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

@@ -16,6 +16,7 @@ backing tier, device HBM the scan tier).
 from __future__ import annotations
 
 import json
+import threading
 from pathlib import Path
 from typing import List, Optional, Sequence, Tuple
 
@@ -36,20 +37,44 @@ class PrecomputedStore:
         self._offsets: List[int] = []
         self._pending_embs: List[np.ndarray] = []
         self._pending_rows = 0
+        # one shared file handle: seek+read / seek+write must be atomic
+        self._lock = threading.Lock()
+
+    # -- lifecycle ----------------------------------------------------------
+    def close(self):
+        """Flush pending rows + manifest and release the text file handle.
+
+        Idempotent; the store is unusable for reads/writes afterwards.
+        """
+        if self._text_f is not None and not self._text_f.closed:
+            self.flush()
+            self._text_f.close()
+
+    @property
+    def closed(self) -> bool:
+        return self._text_f is None or self._text_f.closed
+
+    def __enter__(self) -> "PrecomputedStore":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
 
     # -- write path ---------------------------------------------------------
     def add_batch(self, embs: np.ndarray, queries: Sequence[str],
                   responses: Sequence[str]):
         assert embs.shape == (len(queries), self.dim)
-        self._text_f.seek(0, 2)
-        for q, r in zip(queries, responses):
-            self._offsets.append(self._text_f.tell())
-            self._text_f.write(json.dumps({"q": q, "r": r}) + "\n")
-        self._pending_embs.append(embs.astype(self.emb_dtype))
-        self._pending_rows += len(queries)
-        self.count += len(queries)
-        while self._pending_rows >= SHARD_ROWS:
-            self._flush_shard(SHARD_ROWS)
+        with self._lock:
+            self._text_f.seek(0, 2)
+            for q, r in zip(queries, responses):
+                self._offsets.append(self._text_f.tell())
+                self._text_f.write(json.dumps({"q": q, "r": r}) + "\n")
+            self._pending_embs.append(embs.astype(self.emb_dtype))
+            self._pending_rows += len(queries)
+            self.count += len(queries)
+            while self._pending_rows >= SHARD_ROWS:
+                self._flush_shard(SHARD_ROWS)
 
     def _flush_shard(self, rows):
         buf = np.concatenate(self._pending_embs, axis=0)
@@ -61,15 +86,16 @@ class PrecomputedStore:
         self.shards.append({"file": name, "rows": int(shard.shape[0])})
 
     def flush(self):
-        if self._pending_rows:
-            self._flush_shard(self._pending_rows)
-        self._text_f.flush()
-        np.save(self.root / "offsets.npy",
-                np.asarray(self._offsets, np.int64))
-        manifest = {"dim": self.dim, "count": self.count,
-                    "emb_dtype": str(self.emb_dtype),
-                    "shards": self.shards}
-        (self.root / "manifest.json").write_text(json.dumps(manifest))
+        with self._lock:
+            if self._pending_rows:
+                self._flush_shard(self._pending_rows)
+            self._text_f.flush()
+            np.save(self.root / "offsets.npy",
+                    np.asarray(self._offsets, np.int64))
+            manifest = {"dim": self.dim, "count": self.count,
+                        "emb_dtype": str(self.emb_dtype),
+                        "shards": self.shards}
+            (self.root / "manifest.json").write_text(json.dumps(manifest))
 
     # -- read path ------------------------------------------------------------
     @classmethod
@@ -83,8 +109,11 @@ class PrecomputedStore:
         st.count = man["count"]
         st.shards = man["shards"]
         st._offsets = np.load(root / "offsets.npy").tolist()
-        st._text_f = open(root / "text.jsonl", "r", encoding="utf-8")
+        # "a+" (not "r"): a reopened store must keep serving appends —
+        # §3.1 add_misses writes back into a store opened for reading.
+        st._text_f = open(root / "text.jsonl", "a+", encoding="utf-8")
         st._pending_embs, st._pending_rows = [], 0
+        st._lock = threading.Lock()
         return st
 
     def embeddings(self, mmap: bool = True) -> np.ndarray:
@@ -99,8 +128,10 @@ class PrecomputedStore:
         return np.concatenate([np.asarray(p) for p in parts], axis=0)
 
     def get_pair(self, row: int) -> Tuple[str, str]:
-        self._text_f.seek(self._offsets[row])
-        d = json.loads(self._text_f.readline())
+        with self._lock:
+            self._text_f.seek(self._offsets[row])
+            line = self._text_f.readline()
+        d = json.loads(line)
         return d["q"], d["r"]
 
     def get_response(self, row: int) -> str:

@@ -12,6 +12,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed.sharding import shard_map
+
 
 def sharded_mips_topk(queries, emb, k, *, mesh, shard_axis="model",
                       local_scan=None):
@@ -37,6 +39,6 @@ def sharded_mips_topk(queries, emb, k, *, mesh, shard_axis="model",
         vf, pos = jax.lax.top_k(vg, k)
         return vf, jnp.take_along_axis(ig, pos, axis=1)
 
-    sm = jax.shard_map(local, mesh=mesh, in_specs=(P(), P(shard_axis)),
+    sm = shard_map(local, mesh=mesh, in_specs=(P(), P(shard_axis)),
                        out_specs=(P(), P()), check_vma=False)
     return sm(queries, emb)

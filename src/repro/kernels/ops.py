@@ -23,7 +23,16 @@ def _default_interpret():
 
 @functools.partial(jax.jit, static_argnums=(2, 3))
 def mips_topk(q, x, k, tile_n=512):
-    """q: (Q,D); x: (N,D) -> exact (vals (Q,k), GLOBAL idx (Q,k))."""
+    """q: (Q,D); x: (N,D) -> exact (vals (Q,k), GLOBAL idx (Q,k)).
+
+    ``tile_n`` is clamped to the (128-aligned) store size so small stores —
+    common early in a serving run, before write-backs grow them — don't
+    scan a mostly-padded tile; the per-tile top-k needs k <= tile_n.
+    """
+    n = x.shape[0]
+    if k > n:
+        raise ValueError(f"k={k} exceeds store rows N={n}")
+    tile_n = max(min(tile_n, -(-n // 128) * 128), k)
     vals, idx = mips_topk_pallas(q, x, k, tile_n=tile_n,
                                  interpret=_default_interpret())
     nt = vals.shape[0]

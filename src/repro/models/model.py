@@ -533,6 +533,25 @@ def _encode(cfg, run, params, frames):
     return Lyr.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
 
 
+@jax.custom_vjp
+def _grad_safe_barrier(x):
+    # optimization_barrier has no differentiation rule on older jax; give
+    # it an identity VJP (the barrier is a scheduling fence, gradient-wise
+    # it IS the identity) so training paths can differentiate through it.
+    return jax.lax.optimization_barrier(x)
+
+
+def _grad_safe_barrier_fwd(x):
+    return _grad_safe_barrier(x), None
+
+
+def _grad_safe_barrier_bwd(_, g):
+    return (jax.lax.optimization_barrier(g),)
+
+
+_grad_safe_barrier.defvjp(_grad_safe_barrier_fwd, _grad_safe_barrier_bwd)
+
+
 def _scan_stack(cfg, run, blocks, x, positions, *, kind, build_cache,
                 mrope_positions=None, mask_offset=0):
     """lax.scan over a uniform stacked block pytree."""
@@ -541,7 +560,7 @@ def _scan_stack(cfg, run, blocks, x, positions, *, kind, build_cache,
         # the barrier stops XLA folding downstream f32 upcasts into the
         # remat-saved residual stack (observed: layer inputs stored in BOTH
         # bf16 and f32, ~2x activation memory on deep stacks)
-        x = jax.lax.optimization_barrier(x)
+        x = _grad_safe_barrier(x)
         seq_ax = "model" if run.seq_parallel else None
         x = _constrain(x, run, run.batch_axes, seq_ax, None)
         x, aux, kv = block_fullseq(cfg, run, lp, x, positions, kind=kind,

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List, Optional
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -105,6 +105,20 @@ class Engine:
                       seed: int = 0) -> "Session":
         return Session(self, prompt, max_new, temperature, seed)
 
+    # -- batch session API ----------------------------------------------------
+    def start_batch_session(self, prompts, *, max_new=32, temperature=None,
+                            batch_size: int = None) -> "BatchSession":
+        return BatchSession(self, prompts, max_new=max_new,
+                            temperature=temperature, batch_size=batch_size)
+
+    def generate_batch(self, prompts, *, max_new=32, temperature=None,
+                       batch_size: int = None) -> List[str]:
+        s = self.start_batch_session(prompts, max_new=max_new,
+                                     temperature=temperature,
+                                     batch_size=batch_size)
+        s.run()
+        return [s.text(i) for i in range(s.n)]
+
 
 class Session:
     """Single-request chunked generation with host-side cancellation."""
@@ -179,9 +193,16 @@ class Request:
 
 
 class BatchScheduler:
-    """Fixed B slots over one shared batched cache; requests enter on free
-    slots (prefill -> slot write), leave on EOS/max/cancel. Cancellation is
-    the StorInfer hit path: the slot is freed at the next chunk boundary."""
+    """Fixed B slots over one shared batched cache; requests enter in
+    equal-prompt-length waves (prefill -> slot write), leave on
+    EOS/max/cancel. Cancellation is the StorInfer hit path: the slot is
+    freed at the next chunk boundary.
+
+    Admission is wave-gated: the cache keeps a single shared ``cache_len``,
+    so a new prompt may only be admitted when no slot is mid-decode (a
+    mid-flight admission would reset ``cache_len`` under the live slots)
+    and every prompt admitted into one wave must tokenize to the same
+    length. Mixed-length traffic simply forms multiple waves."""
 
     def __init__(self, engine: Engine, batch_size: int = 4):
         self.e = engine
@@ -208,16 +229,24 @@ class BatchScheduler:
                 r.cancelled = True
 
     def _admit(self):
-        for slot in range(self.B):
-            if self.live[slot] or not self.waiting:
-                continue
-            req = self.waiting.pop(0)
+        if self.live.any():
+            return          # wave in flight; next wave starts once it drains
+        wave_len = None
+        free = list(range(self.B))
+        while free and self.waiting:
+            req = self.waiting[0]
             if req.cancelled:
+                self.waiting.pop(0)
                 req.done = True
                 self.finished.append(req)
                 continue
             ids = self.e.tok.encode(req.prompt, bos=True)
             ids = ids[: self.e.max_len - req.max_new - 1]
+            if wave_len is not None and len(ids) != wave_len:
+                break       # different prompt length -> opens the next wave
+            self.waiting.pop(0)
+            wave_len = len(ids)
+            slot = free.pop(0)
             tokens = jnp.asarray([ids], jnp.int32)
             logits, one_cache = self.e._prefill(self.e.params, tokens)
             self.cache = self.e._write_slot(self.cache, one_cache,
@@ -228,11 +257,7 @@ class BatchScheduler:
             self.token = self.token.at[slot, 0].set(first)
             self.live[slot] = True
             self.reqs[slot] = req
-            # NOTE: single shared cache_len => scheduler admits requests of
-            # equal prompt length per batch wave (padded upstream); the
-            # dry-run decode path uses per-slot lengths via seq-sharded
-            # attention masks instead.
-            self.cache_len = jnp.asarray(len(ids) - 1, jnp.int32)
+            self.cache_len = jnp.asarray(wave_len - 1, jnp.int32)
 
     def _retire(self):
         for slot in range(self.B):
@@ -276,3 +301,61 @@ class BatchScheduler:
             if not self.step_chunk() and not self.waiting:
                 break
         return self.finished
+
+
+# ---------------------------------------------------------------------------
+# Batch session API (used by core.runtime.BatchedRuntime)
+# ---------------------------------------------------------------------------
+
+
+class BatchSession:
+    """A batch of prompts decoded together with per-request cancellation —
+    the batched analogue of ``Session``. ``cancel(i)`` is the StorInfer
+    termination signal for prompt ``i``; it takes effect at the next chunk
+    boundary (or before prefill if the request is still waiting)."""
+
+    def __init__(self, engine: Engine, prompts: Sequence[str], *,
+                 max_new=32, temperature=None, batch_size: int = None):
+        self.n = len(prompts)
+        slots = min(self.n, batch_size) if batch_size else self.n
+        self.sched = BatchScheduler(engine, batch_size=max(slots, 1))
+        per_req_max = (list(max_new) if isinstance(max_new, (list, tuple))
+                       else [max_new] * self.n)
+        self.reqs = [Request(rid=i, prompt=p, max_new=per_req_max[i],
+                             temperature=temperature)
+                     for i, p in enumerate(prompts)]
+        for r in self.reqs:
+            self.sched.submit(r)
+        self.decode_s = 0.0
+        self.chunks_run = 0
+
+    @property
+    def done(self) -> bool:
+        return len(self.sched.finished) >= self.n
+
+    def cancel(self, i: int):
+        self.sched.cancel(i)
+
+    def step_chunk(self):
+        if self.done:
+            return
+        t0 = time.perf_counter()
+        self.sched._admit()
+        if self.sched.step_chunk():
+            self.chunks_run += 1
+        self.decode_s += time.perf_counter() - t0
+
+    def run(self, max_chunks: int = 10000) -> List[Request]:
+        for _ in range(max_chunks):
+            if self.done:
+                break
+            self.step_chunk()
+        return self.results()
+
+    def results(self) -> List[Request]:
+        return sorted(self.sched.finished, key=lambda r: r.rid)
+
+    def text(self, i: int) -> str:
+        return self.sched.e.tok.decode(self.reqs[i].out_ids)
+
+

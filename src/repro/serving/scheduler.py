@@ -1,0 +1,161 @@
+"""Admission queue + microbatcher for the batched StorInfer runtime.
+
+Serving millions of users means queries arrive one at a time but must be
+*processed* together: one embedding batch, one MIPS search batch through
+the index, one LLM dispatch for the misses — the lookup cost amortized
+across every in-flight request (cf. triton_distributed's queued async
+engine workers). ``MicroBatcher`` is that admission layer:
+
+  submit(item) -> Future        (any thread)
+        |                               queue
+        v
+  worker thread: collect up to ``max_batch`` items, waiting at most
+  ``max_wait_s`` after the first arrival, then call
+  ``process_batch(items) -> results`` and resolve the futures.
+
+The batcher is transport-agnostic: ``core.runtime.BatchedRuntime`` plugs
+its ``query_batch`` in as ``process_batch``; a network frontend would do
+the same.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from typing import Any, Callable, List, Optional, Sequence
+
+
+@dataclasses.dataclass
+class Submission:
+    """One queued query and its per-request generation knobs."""
+    text: str
+    max_new: int = 32
+    future: Future = dataclasses.field(default_factory=Future)
+
+
+@dataclasses.dataclass
+class BatcherStats:
+    batches: int = 0
+    items: int = 0
+    max_batch_seen: int = 0
+
+    @property
+    def mean_batch(self) -> float:
+        return self.items / self.batches if self.batches else 0.0
+
+
+class MicroBatcher:
+    """Drains a submission queue into microbatches on a worker thread.
+
+    ``process_batch`` receives a list of ``Submission`` and must return one
+    result per submission (same order). Exceptions fail every future in
+    the batch — the callers see the error, the worker keeps serving.
+    """
+
+    def __init__(self, process_batch: Callable[[List[Submission]],
+                                               Sequence[Any]],
+                 *, max_batch: int = 32, max_wait_s: float = 0.005):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self._process = process_batch
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_s
+        self.stats = BatcherStats()
+        self._q: "queue.Queue[Optional[Submission]]" = queue.Queue()
+        self._worker: Optional[threading.Thread] = None
+        self._stopping = False
+
+    # -- lifecycle ----------------------------------------------------------
+    def start(self) -> "MicroBatcher":
+        if self._worker is None or not self._worker.is_alive():
+            self._stopping = False
+            self._worker = threading.Thread(target=self._run, daemon=True,
+                                            name="microbatcher")
+            self._worker.start()
+        return self
+
+    def stop(self, drain: bool = True):
+        """Stop the worker. ``drain=True`` processes what is already
+        queued first; otherwise pending futures are cancelled."""
+        if self._worker is None:
+            return
+        if not drain:
+            self._stopping = True
+            try:
+                while True:
+                    sub = self._q.get_nowait()
+                    if sub is not None:
+                        sub.future.cancel()
+            except queue.Empty:
+                pass
+        self._q.put(None)                      # wake + shutdown sentinel
+        self._worker.join(timeout=30)
+        self._worker = None
+
+    def __enter__(self) -> "MicroBatcher":
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.stop()
+        return False
+
+    # -- producer side ------------------------------------------------------
+    def submit(self, text: str, *, max_new: int = 32) -> Future:
+        if self._worker is None or not self._worker.is_alive():
+            raise RuntimeError("MicroBatcher is not running; call start()")
+        sub = Submission(text=text, max_new=max_new)
+        self._q.put(sub)
+        return sub.future
+
+    # -- worker side --------------------------------------------------------
+    def _collect(self) -> Optional[List[Submission]]:
+        """Block for the first item, then batch what arrives within the
+        wait window. Returns None on the shutdown sentinel."""
+        first = self._q.get()
+        if first is None:
+            return None
+        batch = [first]
+        deadline = time.monotonic() + self.max_wait_s
+        while len(batch) < self.max_batch:
+            remaining = deadline - time.monotonic()
+            try:
+                nxt = (self._q.get_nowait() if remaining <= 0
+                       else self._q.get(timeout=remaining))
+            except queue.Empty:
+                break
+            if nxt is None:                     # re-queue sentinel and stop
+                self._q.put(None)
+                break
+            batch.append(nxt)
+        return batch
+
+    def _run(self):
+        while True:
+            batch = self._collect()
+            if batch is None:
+                return
+            # atomically move futures to RUNNING; a False return means the
+            # caller cancelled first (and cancel() can no longer succeed
+            # afterwards, so set_result below cannot race)
+            batch = [s for s in batch
+                     if s.future.set_running_or_notify_cancel()]
+            if not batch:
+                continue
+            try:
+                results = self._process(batch)
+                if len(results) != len(batch):
+                    raise RuntimeError(
+                        f"process_batch returned {len(results)} results "
+                        f"for {len(batch)} submissions")
+            except Exception as e:              # noqa: BLE001
+                for s in batch:
+                    s.future.set_exception(e)
+                continue
+            self.stats.batches += 1
+            self.stats.items += len(batch)
+            self.stats.max_batch_seen = max(self.stats.max_batch_seen,
+                                            len(batch))
+            for s, r in zip(batch, results):
+                s.future.set_result(r)

@@ -1,0 +1,81 @@
+"""Minimal stand-in for ``hypothesis`` so the property tests still run
+(with a fixed deterministic sample) when the real library is absent.
+
+Usage in test modules::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ModuleNotFoundError:
+        from _hypothesis_fallback import given, settings, st
+
+Only the strategy surface the suite actually uses is implemented:
+``st.integers``, ``st.lists``, ``st.text``. With real hypothesis installed
+(the dev extra in pyproject.toml) the fallback is never imported.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+DEFAULT_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+class st:  # noqa: N801  (mirrors `hypothesis.strategies` module name)
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: int(rng.integers(min_value,
+                                                      max_value + 1)))
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size=0, max_size=10):
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elements.example(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+    @staticmethod
+    def text(alphabet="abc", min_size=0, max_size=10):
+        chars = list(alphabet)
+
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return "".join(chars[int(i)]
+                           for i in rng.integers(0, len(chars), n))
+        return _Strategy(draw)
+
+
+def settings(max_examples=DEFAULT_EXAMPLES, deadline=None, **_ignored):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def runner(*args, **kwargs):
+            # read at call time: @settings may be applied above OR below
+            # @given, so the attribute can land on either function object
+            n = getattr(runner, "_fallback_max_examples",
+                        getattr(fn, "_fallback_max_examples",
+                                DEFAULT_EXAMPLES))
+            for ex in range(n):
+                rng = np.random.default_rng(1234 + ex)
+                drawn = [s.example(rng) for s in strategies]
+                fn(*args, *drawn, **kwargs)
+
+        # pytest must not see the drawn parameters as fixtures
+        del runner.__wrapped__
+        return runner
+
+    return deco

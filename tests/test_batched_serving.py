@@ -1,0 +1,274 @@
+"""Batched StorInfer serving: BatchedRuntime hit/miss/mixed batches and
+cancellation accounting, MicroBatcher admission, engine batch sessions,
+auto_index tier selection, IVF recall measurement."""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.embedder import HashEmbedder
+from repro.core.index import (FLAT_MAX_ROWS, FlatIndex, IVFIndex,
+                              auto_index, ivf_params, select_tier)
+from repro.core.runtime import (BatchedRuntime, BatchedRuntimeCfg,
+                                StorInferRuntime)
+from repro.core.store import PrecomputedStore
+from repro.core.tokenizer import Tokenizer
+from repro.core.kb import build_kb
+from repro.models import model as M
+from repro.serving.engine import Engine
+from repro.serving.scheduler import MicroBatcher
+
+
+@pytest.fixture(scope="module")
+def tiny_engine():
+    kb = build_kb("squad", n_docs=4)
+    tok = Tokenizer.from_texts([d.text() for d in kb.docs], max_vocab=512)
+    cfg = dataclasses.replace(
+        reduced(get_config("qwen3-1.7b")),
+        vocab_size=tok.vocab_size, n_layers=2)
+    params = M.init_model(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    run = M.RunCfg(attn_impl="naive", remat=False)
+    return Engine(cfg, params, tok, run, max_len=96, chunk=4), tok
+
+
+@pytest.fixture()
+def stored(tmp_path):
+    emb = HashEmbedder()
+    store = PrecomputedStore(tmp_path / "s", dim=emb.dim)
+    qs = ["what is the height of aurora bridge?",
+          "who founded the meridian institute?",
+          "when was the treaty of helsport signed?"]
+    rs = ["the height is two hundred meters.",
+          "elena marchetti founded it.",
+          "it was signed in 1907."]
+    store.add_batch(emb.encode(qs), qs, rs)
+    store.flush()
+    return emb, store, qs, rs
+
+
+# ---------------------------------------------------------------------------
+# BatchedRuntime — search-only batches
+# ---------------------------------------------------------------------------
+
+
+def test_batched_all_hit_search_only(stored):
+    emb, store, qs, rs = stored
+    rt = BatchedRuntime.from_store(store, emb)
+    res = rt.query_batch(qs)
+    assert [r.response for r in res] == rs
+    assert all(r.hit and r.source == "store" and not r.cancelled
+               for r in res)
+    assert rt.stats.hits == 3 and rt.stats.misses == 0
+    assert rt.stats.llm_cancelled == 0      # no engine -> nothing to cancel
+
+
+def test_batched_mixed_hit_miss_search_only(stored):
+    emb, store, qs, rs = stored
+    rt = BatchedRuntime.from_store(store, emb)
+    mixed = [qs[0], "zebra xylophone unrelated nonsense", qs[2]]
+    res = rt.query_batch(mixed)
+    assert [r.hit for r in res] == [True, False, True]
+    assert res[1].source == "llm" and res[1].response == ""
+    assert rt.stats.queries == 3 and rt.stats.hits == 2
+    assert rt.stats.misses == 1 and rt.stats.batches == 1
+
+
+def test_batched_empty_batch(stored):
+    emb, store, qs, rs = stored
+    rt = BatchedRuntime.from_store(store, emb)
+    assert rt.query_batch([]) == []
+    assert rt.stats.queries == 0
+
+
+def test_batched_matches_sequential_runtime(stored):
+    """Same store, same queries: the batched path must agree with the
+    sequential reference runtime on every hit decision and response."""
+    emb, store, qs, rs = stored
+    queries = qs + ["totally novel zebra question"]
+    seq = StorInferRuntime(FlatIndex(store.embeddings()), store, emb)
+    bat = BatchedRuntime.from_store(store, emb)
+    seq_res = [seq.query(q) for q in queries]
+    bat_res = bat.query_batch(queries)
+    for s, b in zip(seq_res, bat_res):
+        assert s.hit == b.hit
+        assert s.response == b.response
+        assert abs(s.score - b.score) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# BatchedRuntime — with engine: cancellation accounting + write-back
+# ---------------------------------------------------------------------------
+
+
+class _SlowEmbedder(HashEmbedder):
+    """Delays encode so the batched decode reliably starts before the
+    search returns — exercising the mid-flight cancellation path."""
+
+    def encode(self, texts):
+        time.sleep(0.1)
+        return super().encode(texts)
+
+
+def test_batched_engine_hits_cancel_misses_decode(tiny_engine, stored):
+    eng, tok = tiny_engine
+    emb, store, qs, rs = stored
+    rt = BatchedRuntime.from_store(store, _SlowEmbedder(), engine=eng)
+    mixed = [qs[0], "completely unrelated zebra xylophone", qs[1]]
+    res = rt.query_batch(mixed, max_new=8)
+    assert res[0].hit and res[0].response == rs[0]
+    assert res[2].hit and res[2].response == rs[1]
+    assert not res[1].hit and res[1].source == "llm"
+    assert res[1].response != "" and not res[1].cancelled
+    # cancellation accounting invariants: llm_cancelled counts exactly the
+    # results flagged cancelled, and only hits can be hit-cancelled
+    assert rt.stats.llm_cancelled == sum(r.cancelled for r in res)
+    assert all(r.hit for r in res if r.cancelled)
+    assert rt.stats.hits == 2 and rt.stats.misses == 1
+
+
+def test_batched_add_misses_writeback_and_rebuild(tiny_engine, stored):
+    eng, tok = tiny_engine
+    emb, store, qs, rs = stored
+    rt = BatchedRuntime.from_store(
+        store, emb, engine=eng,
+        cfg=BatchedRuntimeCfg(add_misses=True, rebuild_every=1))
+    novel = "a brand new zebra question never stored"
+    res = rt.query_batch([novel], max_new=8)
+    assert not res[0].hit
+    assert rt.stats.writebacks == 1 and rt.stats.index_rebuilds == 1
+    assert store.count == 4
+    # the rebuilt index now serves the written-back pair as a hit
+    res2 = rt.query_batch([novel], max_new=8)
+    assert res2[0].hit and res2[0].response == res[0].response
+    assert rt.stats.hits == 1 and rt.stats.misses == 1
+
+
+# ---------------------------------------------------------------------------
+# MicroBatcher admission queue
+# ---------------------------------------------------------------------------
+
+
+def test_microbatcher_batches_and_resolves():
+    seen_batches = []
+
+    def process(subs):
+        seen_batches.append(len(subs))
+        return [s.text.upper() for s in subs]
+
+    with MicroBatcher(process, max_batch=4, max_wait_s=0.05) as mb:
+        futs = [mb.submit(f"q{i}") for i in range(10)]
+        results = [f.result(timeout=10) for f in futs]
+    assert results == [f"Q{i}" for i in range(10)]
+    assert mb.stats.items == 10
+    assert max(seen_batches) <= 4
+    assert mb.stats.batches == len(seen_batches)
+
+
+def test_microbatcher_error_fails_batch_only():
+    def process(subs):
+        if any("bad" in s.text for s in subs):
+            raise ValueError("poison")
+        return [s.text for s in subs]
+
+    mb = MicroBatcher(process, max_batch=1, max_wait_s=0.0).start()
+    try:
+        bad = mb.submit("bad query")
+        with pytest.raises(ValueError):
+            bad.result(timeout=10)
+        ok = mb.submit("fine")          # worker survived the poison batch
+        assert ok.result(timeout=10) == "fine"
+    finally:
+        mb.stop()
+
+
+def test_runtime_submit_end_to_end(stored):
+    emb, store, qs, rs = stored
+    with BatchedRuntime.from_store(
+            store, emb,
+            cfg=BatchedRuntimeCfg(max_batch=8, max_wait_s=0.05)) as rt:
+        futs = [rt.submit(q) for q in qs + ["novel zebra"]]
+        res = [f.result(timeout=30) for f in futs]
+    assert [r.hit for r in res] == [True, True, True, False]
+    assert [r.response for r in res[:3]] == rs
+    assert rt.stats.queries == 4
+
+
+# ---------------------------------------------------------------------------
+# Engine batch session API
+# ---------------------------------------------------------------------------
+
+
+def test_generate_batch_matches_single(tiny_engine):
+    eng, tok = tiny_engine
+    # mixed prompt lengths exercise the wave-gated admission
+    prompts = ["hello world what is", "tell me", "hello world what was"]
+    batch = eng.generate_batch(prompts, max_new=6)
+    single = [eng.generate(p, max_new=6) for p in prompts]
+    assert batch == single
+
+
+def test_batch_session_cancel_is_per_request(tiny_engine):
+    eng, tok = tiny_engine
+    s = eng.start_batch_session(["question one x", "question two y"],
+                                max_new=16)
+    s.cancel(0)
+    s.run()
+    res = s.results()
+    assert res[0].cancelled
+    assert not res[1].cancelled and len(res[1].out_ids) > 0
+
+
+# ---------------------------------------------------------------------------
+# auto_index tier selection + IVF recall
+# ---------------------------------------------------------------------------
+
+
+def test_select_tier_boundaries():
+    assert select_tier(1) == "flat"
+    assert select_tier(FLAT_MAX_ROWS) == "flat"
+    assert select_tier(FLAT_MAX_ROWS + 1) == "ivf"
+    # sharding needs both a multi-device axis and enough rows
+    assert select_tier(4 * FLAT_MAX_ROWS, mesh_axis_size=8) == "sharded"
+    assert select_tier(4 * FLAT_MAX_ROWS - 1, mesh_axis_size=8) == "ivf"
+    assert select_tier(4 * FLAT_MAX_ROWS, mesh_axis_size=1) == "ivf"
+    assert select_tier(100, mesh_axis_size=8) == "flat"
+    with pytest.raises(ValueError):
+        select_tier(0)
+
+
+def test_auto_index_builds_right_types(tmp_path):
+    rng = np.random.default_rng(0)
+    small = rng.normal(size=(50, 32)).astype(np.float32)
+    assert isinstance(auto_index(small), FlatIndex)
+    big = rng.normal(size=(200, 32)).astype(np.float32)
+    idx = auto_index(big, flat_max_rows=64)
+    assert isinstance(idx, IVFIndex)
+    n_lists, nprobe = ivf_params(200)
+    assert idx.n_lists == n_lists and idx.nprobe == nprobe
+    # factory accepts a store too
+    emb = HashEmbedder(dim=32)
+    store = PrecomputedStore(tmp_path / "s", dim=32)
+    store.add_batch(small[:10], [f"q{i}" for i in range(10)],
+                    [f"r{i}" for i in range(10)])
+    store.flush()
+    flat = auto_index(store)
+    assert isinstance(flat, FlatIndex) and len(flat) == 10
+
+
+def test_ivf_recall_vs_flat_method():
+    rng = np.random.default_rng(3)
+    centers = rng.normal(size=(16, 48)).astype(np.float32)
+    x = (centers[rng.integers(0, 16, 1500)]
+         + 0.1 * rng.normal(size=(1500, 48)).astype(np.float32))
+    x /= np.linalg.norm(x, axis=1, keepdims=True)
+    q = x[rng.choice(1500, 40)]
+    ivf = IVFIndex(x, n_lists=16, nprobe=6)
+    r = ivf.recall_vs_flat(q, k=10)
+    assert 0.8 < r <= 1.0, r
+    # probing every list makes IVF exhaustive -> perfect recall
+    full = IVFIndex(x, n_lists=16, nprobe=16)
+    assert full.recall_vs_flat(q, k=10) == 1.0

@@ -4,7 +4,11 @@ import tempfile
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # degrade to a fixed deterministic sample
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import metrics as MX
 from repro.core.embedder import HashEmbedder
@@ -95,6 +99,31 @@ def test_store_roundtrip_and_reopen(kb_env, tmp_path):
     assert e.shape == (3, 384)
     sb = st2.storage_bytes()
     assert sb["index_bytes"] > 0 and sb["metadata_bytes"] > 0
+
+
+def test_store_reopen_then_append(kb_env, tmp_path):
+    """Regression: ``open_`` used to reopen text.jsonl read-only, so
+    add_batch on a reopened store (the §3.1 write-back path) crashed."""
+    kb, emb, tok, chunks = kb_env
+    qs1, rs1 = ["first q"], ["first r."]
+    with PrecomputedStore(tmp_path / "s", dim=384) as store:
+        store.add_batch(emb.encode(qs1), qs1, rs1)
+    assert store.closed           # context manager flushed + closed
+
+    st2 = PrecomputedStore.open_(tmp_path / "s")
+    qs2, rs2 = ["second q", "third q"], ["second r.", "third r."]
+    st2.add_batch(emb.encode(qs2), qs2, rs2)   # append after reopen
+    st2.flush()
+    assert st2.count == 3
+    st2.close()
+    st2.close()                   # close is idempotent
+
+    st3 = PrecomputedStore.open_(tmp_path / "s")
+    allq, allr = qs1 + qs2, rs1 + rs2
+    for i in range(3):
+        assert st3.get_pair(i) == (allq[i], allr[i])
+    assert st3.embeddings().shape == (3, 384)
+    st3.close()
 
 
 # ---------------------------------------------------------------------------
