@@ -45,7 +45,7 @@ def main():
 
     payload = {
         "oracle_sec_per_pair": st["sec_per_pair"],
-        "oracle_max_pair_seconds": st["max_pair_seconds"],
+        "oracle_max_wave_seconds": st["max_wave_seconds"],
         "oracle_discard_frac": st["discarded"] / max(
             st["generated"] + st["discarded"], 1),
         "jaxlm_sec_per_pair_cpu": jax_s_per_pair,

@@ -11,10 +11,10 @@ sys.path.insert(0, "src")
 import numpy as np
 
 from repro.core.embedder import HashEmbedder
-from repro.core.generator import (GenCfg, QueryGenerator, SyntheticOracleLM,
-                                  chunk_key)
+from repro.core.generator import GenCfg, SyntheticOracleLM, chunk_key
 from repro.core.index import FlatIndex
 from repro.core.kb import build_kb, sample_user_queries
+from repro.core.precompute import PrecomputeCfg, PrecomputePipeline
 from repro.core.runtime import RuntimeCfg, StorInferRuntime
 from repro.core.store import PrecomputedStore
 from repro.core.tokenizer import Tokenizer
@@ -27,16 +27,17 @@ def main():
     emb = HashEmbedder()
     tok = Tokenizer.from_texts([d.text() for d in kb.docs])
 
-    # 2. OFFLINE: LLM-driven deduplicated query generation into the store
+    # 2. OFFLINE: batched deduplicated query generation into the store
+    #    (checkpointed — a killed build resumes from the manifest)
     with tempfile.TemporaryDirectory() as td:
         store = PrecomputedStore(td, dim=emb.dim)
-        gen = QueryGenerator(SyntheticOracleLM(kb), emb, tok,
-                             GenCfg(dedup=True))
-        qs, rs, es, stats = gen.generate(chunks, 1500, store=store, seed=0)
-        store.flush()
-        print(f"generated {stats.generated} pairs "
+        pipe = PrecomputePipeline(SyntheticOracleLM(kb), emb, tok,
+                                  GenCfg(dedup=True), PrecomputeCfg(wave=32))
+        qs, rs, es, stats = pipe.run(chunks, 1500, store=store, seed=0)
+        print(f"generated {stats.generated} pairs in {stats.waves} waves "
               f"({stats.discarded} near-duplicates discarded, "
-              f"{stats.seconds:.1f}s); store = "
+              f"{stats.seconds:.1f}s, {stats.pairs_per_sec:.0f} pairs/s); "
+              f"store = "
               f"{store.storage_bytes()['total_bytes'] / 1e6:.2f} MB")
 
         # 3. ONLINE: queries hit the store or fall through

@@ -7,7 +7,10 @@ Subsystems (paper section in parens):
   store      — disk-backed precomputed-pair store (memmap shards, §3.3)
   index      — MIPS indexes: flat / IVF / mesh-sharded (§2 vector search)
   generator  — deduplicated query generation: adaptive query masking +
-               adaptive sampling (§3.2)
+               adaptive sampling (§3.2; the sequential reference loop)
+  precompute — batched, resumable offline build pipeline: wave generation,
+               one embed batch + incremental-index dedup per wave,
+               checkpointed into the store manifest (paper-scale §3.2/3.3)
   runtime    — parallel search + cancellable LLM inference (§3.4, Fig 2);
                BatchedRuntime batches admission/search/decode for serving
   metrics    — Unigram F1 / ROUGE-L / BERTScore-proxy (§4)

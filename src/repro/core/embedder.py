@@ -87,9 +87,12 @@ def _enc_model_cfg(cfg: EncoderCfg):
 class MiniLMEncoder:
     """Mean-pooled transformer encoder; ``encode`` batches + L2-normalizes."""
 
-    def __init__(self, tokenizer, cfg: EncoderCfg = None, seed: int = 0):
+    def __init__(self, tokenizer, cfg: EncoderCfg = None, seed: int = 0,
+                 max_batch: int = 256):
         self.tok = tokenizer
         self.cfg = cfg or EncoderCfg(vocab_size=tokenizer.vocab_size)
+        self.dim = self.cfg.dim
+        self.max_batch = max_batch
         self.mcfg = _enc_model_cfg(self.cfg)
         key = jax.random.PRNGKey(seed)
         self.params = self._init(key)
@@ -122,19 +125,41 @@ class MiniLMEncoder:
         return pooled / jnp.maximum(
             jnp.linalg.norm(pooled, axis=-1, keepdims=True), 1e-9)
 
-    def _batch(self, texts):
+    def _batch(self, texts, pad_to: int = 0):
         L = self.cfg.max_len
-        toks = np.zeros((len(texts), L), np.int32)
-        mask = np.zeros((len(texts), L), np.float32)
+        rows = max(len(texts), pad_to)
+        toks = np.zeros((rows, L), np.int32)
+        mask = np.zeros((rows, L), np.float32)
         for i, t in enumerate(texts):
             ids = self.tok.encode(t)[:L]
             toks[i, :len(ids)] = ids
             mask[i, :len(ids)] = 1.0
         return jnp.asarray(toks), jnp.asarray(mask)
 
+    @staticmethod
+    def _bucket(n: int) -> int:
+        """Next power of two: one jit compilation per bucket instead of one
+        per distinct batch size (precompute waves and serving microbatches
+        arrive in many sizes)."""
+        b = 1
+        while b < n:
+            b *= 2
+        return b
+
     def encode(self, texts: List[str]) -> np.ndarray:
-        toks, mask = self._batch(texts)
-        return np.asarray(self._fwd(self.params, toks, mask))
+        """Batched + L2-normalized. Batches are padded to power-of-two
+        buckets (padding rows carry an all-zero mask and are sliced off)
+        and chunked at ``max_batch`` so arbitrarily large precompute waves
+        neither recompile nor blow device memory."""
+        if not texts:
+            return np.zeros((0, self.dim), np.float32)
+        out = []
+        for lo in range(0, len(texts), self.max_batch):
+            chunk = texts[lo:lo + self.max_batch]
+            toks, mask = self._batch(chunk, pad_to=self._bucket(len(chunk)))
+            out.append(np.asarray(
+                self._fwd(self.params, toks, mask))[:len(chunk)])
+        return out[0] if len(out) == 1 else np.concatenate(out, axis=0)
 
     # -- contrastive training (InfoNCE over paraphrase pairs) --------------
     def train_contrastive(self, pairs, *, steps=200, bs=32, lr=1e-3,

@@ -126,8 +126,33 @@ class GenStats:
     temp_final: float = 0.0
 
 
+def masked_for_chunk(tok, cfg: GenCfg, recent: Sequence[str],
+                     chunk_text: str) -> List[str]:
+    """Adaptive query masking (§3.2): most-recent-first prior queries that
+    fit WHOLE in the remaining context budget. Shared by the sequential
+    generator and the batched precompute pipeline so their masking
+    semantics cannot drift apart."""
+    budget = cfg.max_ctx - tok.count(chunk_text) - cfg.scaffold_tokens
+    chosen = []
+    for q in reversed(recent[-cfg.mask_recent:]):
+        n = tok.count(q)
+        if n <= budget:              # only COMPLETE prior queries
+            chosen.append(q)
+            budget -= n
+        # (queries that don't fit are skipped, not truncated)
+    return chosen
+
+
 class QueryGenerator:
-    """Drives a QueryLM over a knowledge base into a store/index."""
+    """Drives a QueryLM over a knowledge base into a store/index.
+
+    This is the paper's strictly sequential loop — one candidate, one
+    ``embedder.encode`` call, one dense dedup scan per step — kept as the
+    semantic reference and benchmark baseline. The production offline path
+    is ``repro.core.precompute.PrecomputePipeline``, which batches the
+    embed + dedup across a wave of candidates (>= 3x pairs/sec at wave 32;
+    identical semantics at wave 1).
+    """
 
     def __init__(self, lm: QueryLM, embedder, tokenizer, cfg: GenCfg = None):
         self.lm = lm
@@ -137,16 +162,7 @@ class QueryGenerator:
 
     # -- adaptive query masking --------------------------------------------
     def select_masked(self, recent: List[str], chunk_text: str) -> List[str]:
-        budget = (self.cfg.max_ctx - self.tok.count(chunk_text)
-                  - self.cfg.scaffold_tokens)
-        chosen = []
-        for q in reversed(recent[-self.cfg.mask_recent:]):
-            n = self.tok.count(q)
-            if n <= budget:          # only COMPLETE prior queries
-                chosen.append(q)
-                budget -= n
-            # (queries that don't fit are skipped, not truncated)
-        return chosen
+        return masked_for_chunk(self.tok, self.cfg, recent, chunk_text)
 
     # -- main loop ------------------------------------------------------------
     def generate(self, chunks: Sequence[str], n_target: int, *, seed=0,

@@ -6,24 +6,57 @@ scan — a matmul, the single most roofline-friendly op on the platform —
 with IVF coarse pruning for sub-linear probes and a mesh-sharded variant
 (rows over "model", distributed top-k) for pod-scale stores.
 
-  FlatIndex    — exact brute MIPS (jnp matmul + top_k; the Pallas
-                 ``mips_topk`` kernel implements the same contract on TPU).
-  IVFIndex     — k-means coarse quantizer, scans nprobe lists.
-  ShardedIndex — rows sharded over a mesh axis, local top-k + all-gather
-                 combine (repro.distributed.topk).
+  FlatIndex        — exact brute MIPS (jnp matmul + top_k; the Pallas
+                     ``mips_topk`` kernel implements the same contract on
+                     TPU).
+  IVFIndex         — k-means coarse quantizer, scans nprobe lists; persists
+                     its centroids + padded list layout (``save``/``load``)
+                     so reopening a paper-scale store skips k-means.
+  ShardedIndex     — rows sharded over a mesh axis, local top-k + all-gather
+                     combine (repro.distributed.topk).
+  IncrementalIndex — append-only max-similarity index for the OFFLINE dedup
+                     loop: ``add()`` + ``max_sim()``, flat below the tier
+                     boundary, IVF with assign-to-nearest-centroid appends
+                     and amortized re-clustering above it.
 
-``auto_index`` picks between the three from store size and mesh
+``auto_index`` picks between the serving tiers from store size and mesh
 availability (see ``select_tier`` for the exact boundaries) so callers —
-the batched runtime in particular — never hard-code a tier.
+the batched runtime in particular — never hard-code a tier; pass
+``cache_dir=`` to load/save the IVF build product instead of re-running
+k-means on every reopen.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional, Tuple
+import json
+import os
+import threading
+import zlib
+from pathlib import Path
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+# Below this row count an exact flat scan is one small matmul and beats any
+# pruning overhead; above it IVF's nprobe/n_lists scan fraction wins. The
+# paper's 150K-pair store lands in the IVF tier.
+FLAT_MAX_ROWS = 32768
+# Sharding only pays once each shard is a non-trivial scan.
+SHARD_MIN_ROWS = 4 * FLAT_MAX_ROWS
+
+
+def _device_embs(embs) -> jnp.ndarray:
+    """Host→device (N, D) float32 without a full host-side copy: a
+    ``ShardedEmbeddings`` view moves one shard at a time (upcast + device
+    put per shard), so peak host memory is one shard, not the store."""
+    if hasattr(embs, "iter_shards"):
+        parts = [jnp.asarray(np.asarray(s, np.float32))
+                 for s in embs.iter_shards()]
+        if not parts:
+            return jnp.zeros(embs.shape, jnp.float32)
+        return parts[0] if len(parts) == 1 else jnp.concatenate(parts, 0)
+    return jnp.asarray(np.asarray(embs, np.float32))
 
 
 class FlatIndex:
@@ -31,7 +64,7 @@ class FlatIndex:
     mips_topk op (interpret mode on CPU)."""
 
     def __init__(self, embs: np.ndarray, use_kernel: bool = False):
-        self.embs = jnp.asarray(np.asarray(embs, np.float32))
+        self.embs = _device_embs(embs)
         self.use_kernel = use_kernel
         self._search = jax.jit(self._search_impl, static_argnums=(2,))
 
@@ -57,25 +90,33 @@ class FlatIndex:
 
 
 def kmeans(x: jnp.ndarray, n_clusters: int, iters: int = 10, seed: int = 0):
-    """Plain Lloyd's on the device. Returns (centroids, assignment)."""
-    key = jax.random.PRNGKey(seed)
+    """Plain Lloyd's on the device. Returns (centroids, assignment).
+
+    ``n_clusters`` is clamped to the row count — sampling n_clusters
+    distinct seed rows with ``replace=False`` is otherwise impossible (and
+    used to crash on stores smaller than the requested list count)."""
     n = x.shape[0]
+    n_clusters = max(1, min(int(n_clusters), int(n)))
+    key = jax.random.PRNGKey(seed)
     init = jax.random.choice(key, n, (n_clusters,), replace=False)
     cent = x[init]
 
-    @jax.jit
-    def step(cent):
+    # x is a traced ARGUMENT, not a closure capture: captured arrays are
+    # baked into the jaxpr as constants, which XLA then constant-folds
+    # (minutes of compile at paper-scale row counts, once per refit)
+    def step(x, cent):
         d = (jnp.sum(x * x, 1)[:, None] - 2 * x @ cent.T
              + jnp.sum(cent * cent, 1)[None, :])
         a = jnp.argmin(d, axis=1)
-        oh = jax.nn.one_hot(a, n_clusters, dtype=x.dtype)
+        oh = jax.nn.one_hot(a, cent.shape[0], dtype=x.dtype)
         sums = oh.T @ x
         counts = oh.sum(0)[:, None]
         new = jnp.where(counts > 0, sums / jnp.maximum(counts, 1), cent)
         return new, a
 
+    step = jax.jit(step)
     for _ in range(iters):
-        cent, assign = step(cent)
+        cent, assign = step(x, cent)
     return cent, assign
 
 
@@ -84,22 +125,30 @@ class IVFIndex:
 
     Padded list layout (lists, cap, dim) so the probe scan is one gather +
     batched matmul — TPU-friendly, no ragged pointers.
+
+    ``save``/``load`` persist the k-means product (centroids + the padded
+    id layout; the vectors themselves are re-gathered from the store on
+    load), so reopening a 150K-row store costs one gather instead of a
+    fresh k-means fit.
     """
 
     def __init__(self, embs: np.ndarray, n_lists: int = 64, nprobe: int = 8,
                  seed: int = 0):
-        x = jnp.asarray(np.asarray(embs, np.float32))
+        x = _device_embs(embs)
         self.n_total = int(x.shape[0])
-        self.nprobe = min(nprobe, n_lists)
-        self.n_lists = n_lists
-        cent, assign = kmeans(x, n_lists, seed=seed)
+        # clamp: k-means cannot seed more lists than there are rows
+        self.n_lists = max(1, min(n_lists, self.n_total))
+        self.nprobe = min(nprobe, self.n_lists)
+        self.loaded_from: Optional[str] = None
+        cent, assign = kmeans(x, self.n_lists, seed=seed)
         self.centroids = cent
         assign = np.asarray(assign)
-        cap = max(int(np.max(np.bincount(assign, minlength=n_lists))), 1)
-        N, D = x.shape
-        buf = np.zeros((n_lists, cap, D), np.float32)
-        ids = np.full((n_lists, cap), -1, np.int32)
-        fill = np.zeros(n_lists, np.int32)
+        cap = max(int(np.max(np.bincount(assign, minlength=self.n_lists))),
+                  1)
+        D = x.shape[1]
+        buf = np.zeros((self.n_lists, cap, D), np.float32)
+        ids = np.full((self.n_lists, cap), -1, np.int32)
+        fill = np.zeros(self.n_lists, np.int32)
         xe = np.asarray(x)
         for row, a in enumerate(assign):
             buf[a, fill[a]] = xe[row]
@@ -108,6 +157,69 @@ class IVFIndex:
         self.lists = jnp.asarray(buf)
         self.ids = jnp.asarray(ids)
         self._search = jax.jit(self._search_impl, static_argnums=(1,))
+
+    # -- persistence ----------------------------------------------------------
+    @staticmethod
+    def _fingerprint(lists: np.ndarray, ids: np.ndarray) -> int:
+        """Content digest of a vector sample (first 256 valid rows in
+        list-major order): row count alone cannot tell a rebuilt store
+        with different content apart from the one the fit belongs to."""
+        valid = np.flatnonzero(ids.ravel() >= 0)[:256]
+        flat = lists.reshape(-1, lists.shape[-1])
+        sample = np.ascontiguousarray(flat[valid], np.float32)
+        return zlib.crc32(sample.tobytes())
+
+    def save(self, path):
+        """Persist centroids + padded id layout (tiny: no raw vectors —
+        ``load`` re-gathers them from the store's memmap shards). Written
+        atomically (tmp + rename) so a killed build never leaves a torn
+        cache."""
+        path = Path(path)
+        meta = {"n_total": self.n_total, "n_lists": self.n_lists,
+                "nprobe": self.nprobe,
+                "dim": int(self.centroids.shape[1]),
+                "fingerprint": self._fingerprint(np.asarray(self.lists),
+                                                 np.asarray(self.ids))}
+        tmp = path.with_name(path.name + ".tmp")
+        with open(tmp, "wb") as f:
+            np.savez(f, centroids=np.asarray(self.centroids),
+                     ids=np.asarray(self.ids),
+                     meta=np.frombuffer(json.dumps(meta).encode(), np.uint8))
+        os.replace(tmp, path)
+        return path
+
+    @classmethod
+    def load(cls, path, embs) -> "IVFIndex":
+        """Rebuild from a ``save``d layout + the store embeddings (any
+        array or ``ShardedEmbeddings`` view) — no k-means."""
+        path = Path(path)
+        with np.load(path) as d:
+            meta = json.loads(bytes(d["meta"]).decode())
+            centroids = d["centroids"]
+            ids = d["ids"]
+        st = cls.__new__(cls)
+        st.n_total = int(meta["n_total"])
+        st.n_lists = int(meta["n_lists"])
+        st.nprobe = int(meta["nprobe"])
+        st.loaded_from = str(path)
+        st.centroids = jnp.asarray(centroids)
+        valid = ids >= 0
+        rows = ids[valid]
+        if hasattr(embs, "iter_shards"):
+            vecs = embs.take(rows)       # per-shard row gather, no full copy
+        else:
+            vecs = np.asarray(embs)[rows]
+        buf = np.zeros(ids.shape + (int(meta["dim"]),), np.float32)
+        buf[valid] = np.asarray(vecs, np.float32)
+        want = meta.get("fingerprint")
+        if want is not None and cls._fingerprint(buf, ids) != want:
+            raise ValueError(
+                f"{path}: persisted IVF fit belongs to different store "
+                "content (same row count, different vectors) — rebuild")
+        st.lists = jnp.asarray(buf)
+        st.ids = jnp.asarray(ids)
+        st._search = jax.jit(st._search_impl, static_argnums=(1,))
+        return st
 
     def _search_impl(self, q, k):
         # 1. coarse: score centroids
@@ -159,6 +271,203 @@ class IVFIndex:
         return float(np.mean(hits))
 
 
+# ---------------------------------------------------------------------------
+# Incremental dedup index (offline pipeline)
+# ---------------------------------------------------------------------------
+
+
+class IncrementalIndex:
+    """Append-only max-similarity index for the offline dedup loop (§3.2 at
+    paper scale): ``add(embs)`` + ``max_sim(queries)``.
+
+    Replaces the sequential generator's quadratic scan (re-``concatenate``
+    the full embedding matrix + full-matrix matmul per candidate):
+
+    * **flat** (≤ ``flat_max_rows``): rows live in one amortized-doubling
+      buffer; ``max_sim`` is a single blocked matmul per wave.
+    * **ivf** (above it): rows are assigned to their nearest (max-dot)
+      centroid on ``add`` and ``max_sim`` probes only the top-``nprobe``
+      lists — sub-linear, approximate like any ANN dedup (the paper's
+      DiskANN dedup is too). Assignment and probing use the same
+      inner-product metric, so an exact duplicate always probes the list
+      that holds its twin.
+
+    Re-clustering is amortized: centroids are refit (k-means over all rows
+    so far) whenever the row count crosses ``flat_max_rows * 2^k``. In the
+    default deterministic mode, ``add`` splits batches exactly at those
+    thresholds, so the index state is a pure function of the row sequence —
+    independent of how adds were batched. That is what makes a kill-and-
+    resume rebuild (re-adding shard-at-a-time) bit-identical to the
+    uninterrupted build. ``background=True`` moves refits to a thread for
+    throughput, giving up that determinism.
+    """
+
+    def __init__(self, dim: int, *, flat_max_rows: int = FLAT_MAX_ROWS,
+                 probe_frac: float = 1 / 16, seed: int = 0,
+                 background: bool = False):
+        self.dim = dim
+        self.flat_max_rows = flat_max_rows
+        self.probe_frac = probe_frac
+        self.seed = seed
+        self.background = background
+        self._buf = np.empty((1024, dim), np.float32)
+        self._n = 0
+        self._next_refit = flat_max_rows
+        self.centroids: Optional[np.ndarray] = None     # (L, D) in ivf mode
+        self._list_ids: List[np.ndarray] = []           # ragged int32 lists
+        self._list_n: Optional[np.ndarray] = None
+        self._lock = threading.Lock()
+        self._refit_thread: Optional[threading.Thread] = None
+        self.refits = 0
+
+    def __len__(self) -> int:
+        return self._n
+
+    @property
+    def mode(self) -> str:
+        return "flat" if self.centroids is None else "ivf"
+
+    @property
+    def nprobe(self) -> int:
+        """Duplicates share their twin's top-1 list by construction (same
+        inner-product metric for assignment and probing), so a thin probe
+        fan suffices for dedup — min 4 lists for near-boundary cases."""
+        n_lists = len(self._list_ids)
+        return max(1, min(n_lists,
+                          max(4, int(round(n_lists * self.probe_frac)))))
+
+    # -- append ---------------------------------------------------------------
+    def add(self, embs: np.ndarray):
+        embs = np.asarray(embs, np.float32)
+        if embs.ndim == 1:
+            embs = embs[None, :]
+        if self.background:
+            self._append(embs)
+            if self._n >= self._next_refit and (
+                    self._refit_thread is None
+                    or not self._refit_thread.is_alive()):
+                self._next_refit *= 2
+                self._refit_thread = threading.Thread(
+                    target=self._refit, daemon=True)
+                self._refit_thread.start()
+            return
+        # deterministic mode: split the batch at refit thresholds so the
+        # fit always sees exactly `threshold` rows, however adds arrive
+        while len(embs):
+            room = self._next_refit - self._n
+            head, embs = embs[:room], embs[room:]
+            self._append(head)
+            if self._n == self._next_refit:
+                self._refit()
+                self._next_refit *= 2
+
+    def _grow(self, need: int):
+        cap = self._buf.shape[0]
+        if self._n + need <= cap:
+            return
+        while cap < self._n + need:
+            cap *= 2
+        new = np.empty((cap, self.dim), np.float32)
+        new[:self._n] = self._buf[:self._n]
+        self._buf = new
+
+    def _append(self, embs: np.ndarray):
+        with self._lock:
+            self._grow(len(embs))
+            lo = self._n
+            self._buf[lo:lo + len(embs)] = embs
+            self._n += len(embs)
+            if self.centroids is not None:
+                assign = np.argmax(embs @ self.centroids.T, axis=1)
+                for j, a in enumerate(assign):
+                    self._list_append(int(a), lo + j)
+
+    def _list_append(self, a: int, row: int):
+        ids, n = self._list_ids[a], int(self._list_n[a])
+        if n == ids.shape[0]:
+            grown = np.empty(max(2 * n, 8), np.int32)
+            grown[:n] = ids
+            self._list_ids[a] = ids = grown
+        ids[n] = row
+        self._list_n[a] += 1
+
+    def _refit(self):
+        """K-means over all rows so far; rebuild the assignment lists.
+        In background mode the fit runs without the lock (appends continue
+        against the old centroids) and only the swap is locked."""
+        with self._lock:
+            n0 = self._n
+            x = self._buf[:n0].copy() if self.background \
+                else self._buf[:n0]
+        n_lists, _ = ivf_params(n0)
+        cent, assign = kmeans(jnp.asarray(x), n_lists, seed=self.seed)
+        cent = np.asarray(cent)
+        with self._lock:
+            # re-assign by max inner product (the probe metric) so a row
+            # is always found in the list its duplicates will probe first
+            assign = np.argmax(self._buf[:self._n] @ cent.T, axis=1)
+            self.centroids = cent
+            counts = np.bincount(assign, minlength=cent.shape[0])
+            self._list_ids = [np.empty(max(int(c), 8), np.int32)
+                              for c in counts]
+            self._list_n = np.zeros(cent.shape[0], np.int64)
+            order = np.argsort(assign, kind="stable")
+            sorted_assign = assign[order]
+            starts = np.searchsorted(sorted_assign,
+                                     np.arange(cent.shape[0]))
+            ends = np.searchsorted(sorted_assign,
+                                   np.arange(cent.shape[0]), side="right")
+            for a in range(cent.shape[0]):
+                rows = order[starts[a]:ends[a]]
+                self._list_ids[a][:len(rows)] = rows
+                self._list_n[a] = len(rows)
+            self.refits += 1
+
+    def drain(self):
+        """Join an in-flight background refit (no-op otherwise)."""
+        if self._refit_thread is not None:
+            self._refit_thread.join()
+
+    # -- query ----------------------------------------------------------------
+    def max_sim(self, queries: np.ndarray) -> np.ndarray:
+        """Max inner product of each query against every stored row
+        (-inf when empty). Exact in flat mode; nprobe-approximate in ivf."""
+        q = np.asarray(queries, np.float32)
+        if q.ndim == 1:
+            q = q[None, :]
+        with self._lock:
+            n = self._n
+            if n == 0:
+                return np.full(q.shape[0], -np.inf, np.float32)
+            if self.centroids is None:
+                return (q @ self._buf[:n].T).max(axis=1)
+            cent, buf = self.centroids, self._buf
+            nprobe = self.nprobe
+            Q = q.shape[0]
+            cs = q @ cent.T
+            probes = np.argpartition(cs, -nprobe, axis=1)[:, -nprobe:]
+            # invert (query -> lists) to (list -> queries): each probed
+            # list is gathered ONCE per call and scanned as one matmul
+            # against every query that probes it — per-query gathers were
+            # the offline-build bottleneck at paper scale
+            flat = probes.ravel()
+            qidx = np.repeat(np.arange(Q), nprobe)
+            order = np.argsort(flat, kind="stable")
+            flat, qidx = flat[order], qidx[order]
+            bounds = np.searchsorted(flat, np.arange(len(self._list_ids)))
+            out = np.full(Q, -np.inf, np.float32)
+            for a in np.unique(flat):
+                lo = bounds[a]
+                hi = bounds[a + 1] if a + 1 < len(bounds) else len(flat)
+                n = int(self._list_n[a])
+                if n == 0:
+                    continue
+                qs = qidx[lo:hi]
+                s = (buf[self._list_ids[a][:n]] @ q[qs].T).max(axis=0)
+                np.maximum.at(out, qs, s)
+            return out
+
+
 class ShardedIndex:
     """Mesh-sharded exact MIPS: rows over ``shard_axis``, distributed top-k."""
 
@@ -192,13 +501,6 @@ class ShardedIndex:
 # Tier auto-selection
 # ---------------------------------------------------------------------------
 
-# Below this row count an exact flat scan is one small matmul and beats any
-# pruning overhead; above it IVF's nprobe/n_lists scan fraction wins. The
-# paper's 150K-pair store lands in the IVF tier.
-FLAT_MAX_ROWS = 32768
-# Sharding only pays once each shard is a non-trivial scan.
-SHARD_MIN_ROWS = 4 * FLAT_MAX_ROWS
-
 
 def select_tier(n_rows: int, mesh_axis_size: int = 1, *,
                 flat_max_rows: int = FLAT_MAX_ROWS,
@@ -225,35 +527,57 @@ def ivf_params(n_rows: int) -> Tuple[int, int]:
     return n_lists, min(nprobe, n_lists)
 
 
+IVF_CACHE_NAME = "index_ivf.npz"
+
+
 def auto_index(store, mesh=None, *, shard_axis: str = "model",
                use_kernel: Optional[bool] = None,
                flat_max_rows: int = FLAT_MAX_ROWS,
-               shard_min_rows: int = SHARD_MIN_ROWS, seed: int = 0):
+               shard_min_rows: int = SHARD_MIN_ROWS, seed: int = 0,
+               cache_dir=None):
     """Build the right index tier for ``store`` (a PrecomputedStore, or any
     object with ``.embeddings()``, or a raw (N, D) array).
 
     ``use_kernel=None`` routes the flat scan through the Pallas mips_topk
     kernel when running on a real TPU and keeps the plain jnp path (faster
     than interpret mode) on CPU.
+
+    ``cache_dir`` (typically the store root) persists the IVF k-means
+    product: a matching cache loads (no k-means); a stale or missing one
+    rebuilds and re-saves. Flat and sharded tiers have no build product to
+    cache, so the option is a no-op there.
     """
     if hasattr(store, "embeddings"):
-        embs = np.asarray(store.embeddings(), np.float32)
+        embs = store.embeddings()
     else:
         embs = np.asarray(store, np.float32)
+    n_rows = int(embs.shape[0])
     axis_size = 1
     if mesh is not None:
         try:
             axis_size = int(mesh.shape[shard_axis])
         except (KeyError, TypeError):
             axis_size = 1
-    tier = select_tier(embs.shape[0], axis_size,
+    tier = select_tier(n_rows, axis_size,
                        flat_max_rows=flat_max_rows,
                        shard_min_rows=shard_min_rows)
     if tier == "sharded":
-        return ShardedIndex(embs, mesh, shard_axis=shard_axis)
+        return ShardedIndex(np.asarray(embs), mesh, shard_axis=shard_axis)
     if tier == "ivf":
-        n_lists, nprobe = ivf_params(embs.shape[0])
-        return IVFIndex(embs, n_lists=n_lists, nprobe=nprobe, seed=seed)
+        n_lists, nprobe = ivf_params(n_rows)
+        cache = Path(cache_dir) / IVF_CACHE_NAME if cache_dir else None
+        if cache is not None and cache.exists():
+            try:
+                idx = IVFIndex.load(cache, embs)
+                if (idx.n_total == n_rows and idx.n_lists == n_lists
+                        and idx.nprobe == nprobe):
+                    return idx
+            except Exception:
+                pass              # unreadable/stale cache: rebuild below
+        idx = IVFIndex(embs, n_lists=n_lists, nprobe=nprobe, seed=seed)
+        if cache is not None:
+            idx.save(cache)
+        return idx
     if use_kernel is None:
         use_kernel = jax.default_backend() == "tpu"
     return FlatIndex(embs, use_kernel=use_kernel)

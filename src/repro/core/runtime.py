@@ -188,8 +188,17 @@ class BatchedRuntime:
     @classmethod
     def from_store(cls, store, embedder, engine=None,
                    cfg: BatchedRuntimeCfg = None, mesh=None,
-                   **auto_index_kw) -> "BatchedRuntime":
+                   cache_dir=None, **auto_index_kw) -> "BatchedRuntime":
+        """``cache_dir`` enables the persisted-IVF path: ``"store"`` uses
+        the store's own root (the offline pipeline saves its index there),
+        any other path is used as-is. Reopening a paper-scale store then
+        loads the k-means product instead of refitting it; periodic
+        ``flush_and_rebuild`` refreshes the same cache as the store grows
+        (the stale row count forces a rebuild + re-save)."""
         from repro.core.index import auto_index
+        if cache_dir is not None:
+            auto_index_kw["cache_dir"] = str(
+                store.root if cache_dir == "store" else cache_dir)
         return cls(auto_index(store, mesh, **auto_index_kw), store,
                    embedder, engine, cfg=cfg, mesh=mesh,
                    auto_index_kw=auto_index_kw)

@@ -1,10 +1,14 @@
 """Disk-backed precomputed query-response store (§3.3).
 
-Layout on disk (root/):
-  manifest.json          — dim, dtype, count, shard list, storage split
+Layout on disk (root/): see docs/ARCHITECTURE.md for the full format table.
+  manifest.json          — dim, dtype, count, shard list, shard_rows,
+                           text_bytes (crash-recovery watermark), extra
+                           (e.g. the precompute pipeline's ``gen_state``
+                           resume checkpoint)
   emb_XXXX.npy           — embedding shards, (rows, dim) float16 memmap
   text.jsonl             — one {"q": query, "r": response} per row
   offsets.npy            — byte offset of each row in text.jsonl
+  index_ivf.npz          — optional persisted IVF index (auto_index cache)
 
 Embeddings are the "index tier" (paper: 810 MB DiskANN index for 150K),
 responses the "metadata tier" (paper: 20 MB); ``storage_bytes()`` reports
@@ -12,28 +16,109 @@ the same split for Fig 4 / §4. Appends flush shard-at-a-time; ``open_``
 memory-maps the shards so a store larger than RAM still serves (the
 storage-as-memory-tier premise of the paper, adapted: host RAM/NVMe is the
 backing tier, device HBM the scan tier).
+
+Crash safety: ``flush()`` writes offsets.npy and manifest.json atomically
+(tmp + rename) and records the committed text.jsonl byte length; ``open_``
+truncates any trailing bytes a killed writer appended past the last flush,
+so a resumed build continues from exactly the committed prefix.
 """
 from __future__ import annotations
 
 import json
+import os
 import threading
 from pathlib import Path
-from typing import List, Optional, Sequence, Tuple
+from typing import Iterator, List, Sequence, Tuple
 
 import numpy as np
 
 SHARD_ROWS = 32768
 
 
+class ShardedEmbeddings:
+    """Lazy row-concatenated view over embedding shards.
+
+    ``embeddings(mmap=True)`` used to ``np.concatenate`` every shard into
+    RAM — defeating the memmap for exactly the multi-shard stores that need
+    it. This view keeps the shards as-is (memmaps for flushed shards, small
+    ndarrays for pending rows) and quacks enough like an (N, D) array for
+    the index builders: ``shape``/``dtype``/``len``, row indexing/slicing,
+    ``take`` (row gather that touches only the requested rows per shard),
+    and ``np.asarray`` for callers that explicitly want a materialized copy.
+    Index builds iterate ``iter_shards()`` so peak host memory is one shard,
+    not the store.
+    """
+
+    def __init__(self, parts: List[np.ndarray], dim: int, dtype):
+        self.parts = parts
+        self.shape = (int(sum(p.shape[0] for p in parts)), dim)
+        self.dtype = np.dtype(dtype)
+        self.ndim = 2
+
+    def __len__(self) -> int:
+        return self.shape[0]
+
+    def iter_shards(self) -> Iterator[np.ndarray]:
+        yield from self.parts
+
+    def __array__(self, dtype=None, copy=None):
+        if not self.parts:
+            return np.zeros(self.shape, dtype or self.dtype)
+        out = np.concatenate([np.asarray(p) for p in self.parts], axis=0)
+        return out.astype(dtype) if dtype is not None else out
+
+    def take(self, rows) -> np.ndarray:
+        """Gather arbitrary rows (int array or boolean mask); reads only
+        the requested rows from each shard. Negative indices wrap and
+        out-of-range ones raise, matching ndarray semantics."""
+        rows = np.asarray(rows)
+        if rows.dtype == bool:
+            if rows.shape[0] != self.shape[0]:
+                raise IndexError(
+                    f"boolean mask of length {rows.shape[0]} over "
+                    f"{self.shape[0]} rows")
+            rows = np.nonzero(rows)[0]
+        rows = rows.astype(np.int64)
+        n = self.shape[0]
+        rows = np.where(rows < 0, rows + n, rows)
+        if rows.size and (rows.min() < 0 or rows.max() >= n):
+            raise IndexError(
+                f"row index out of range for {n}-row embedding view")
+        out = np.empty((rows.shape[0], self.shape[1]), self.dtype)
+        lo = 0
+        for p in self.parts:
+            hi = lo + p.shape[0]
+            m = (rows >= lo) & (rows < hi)
+            if m.any():
+                out[m] = np.asarray(p[rows[m] - lo])
+            lo = hi
+        return out
+
+    def __getitem__(self, key):
+        if isinstance(key, (int, np.integer)):
+            return self.take(np.asarray([key]))[0]
+        if isinstance(key, slice):
+            return self.take(np.arange(*key.indices(self.shape[0])))
+        return self.take(key)
+
+
 class PrecomputedStore:
-    def __init__(self, root, dim: int, emb_dtype="float16"):
+    def __init__(self, root, dim: int, emb_dtype="float16",
+                 shard_rows: int = SHARD_ROWS):
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
         self.dim = dim
         self.emb_dtype = np.dtype(emb_dtype)
+        self.shard_rows = shard_rows
         self.count = 0
         self.shards: List[dict] = []
-        self._text_f = open(self.root / "text.jsonl", "a+", encoding="utf-8")
+        self.manifest_extra: dict = {}
+        # "w+": this is the CREATE path — a build killed before its first
+        # flush leaves a dirty text.jsonl with no manifest, and appending
+        # after those orphans would bake dead rows into the fresh store
+        # (reopen-for-append goes through open_, which truncates to the
+        # committed watermark instead)
+        self._text_f = open(self.root / "text.jsonl", "w+", encoding="utf-8")
         self._offsets: List[int] = []
         self._pending_embs: List[np.ndarray] = []
         self._pending_rows = 0
@@ -73,8 +158,8 @@ class PrecomputedStore:
             self._pending_embs.append(embs.astype(self.emb_dtype))
             self._pending_rows += len(queries)
             self.count += len(queries)
-            while self._pending_rows >= SHARD_ROWS:
-                self._flush_shard(SHARD_ROWS)
+            while self._pending_rows >= self.shard_rows:
+                self._flush_shard(self.shard_rows)
 
     def _flush_shard(self, rows):
         buf = np.concatenate(self._pending_embs, axis=0)
@@ -82,20 +167,50 @@ class PrecomputedStore:
         self._pending_embs = [rest] if len(rest) else []
         self._pending_rows = len(rest)
         name = f"emb_{len(self.shards):04d}.npy"
-        np.save(self.root / name, shard)
+        # tmp + rename: a partial tail shard is REWRITTEN under the same
+        # name on later flushes, and the committed manifest may already
+        # reference it — a torn overwrite would corrupt the store
+        self._atomic_npy(name, shard)
         self.shards.append({"file": name, "rows": int(shard.shape[0])})
 
     def flush(self):
         with self._lock:
             if self._pending_rows:
-                self._flush_shard(self._pending_rows)
+                # merge pending rows into a trailing partial shard first:
+                # checkpoint-heavy builds flush often, and cutting a tiny
+                # shard per flush would fragment a paper-scale store into
+                # hundreds of files. This keeps the layout a pure function
+                # of the row count: full shards plus at most one tail.
+                if self.shards and self.shards[-1]["rows"] < self.shard_rows:
+                    last = self.shards.pop()
+                    prev = np.load(self.root / last["file"])
+                    self._pending_embs.insert(0, prev)
+                    self._pending_rows += last["rows"]
+                while self._pending_rows >= self.shard_rows:
+                    self._flush_shard(self.shard_rows)
+                if self._pending_rows:
+                    self._flush_shard(self._pending_rows)
             self._text_f.flush()
-            np.save(self.root / "offsets.npy",
-                    np.asarray(self._offsets, np.int64))
+            text_bytes = os.fstat(self._text_f.fileno()).st_size
+            # atomic commits (tmp + rename): a kill mid-flush leaves either
+            # the old or the new file, never a torn one — that's what makes
+            # resumable builds safe to restart from the manifest
+            self._atomic_npy("offsets.npy",
+                             np.asarray(self._offsets, np.int64))
             manifest = {"dim": self.dim, "count": self.count,
                         "emb_dtype": str(self.emb_dtype),
-                        "shards": self.shards}
-            (self.root / "manifest.json").write_text(json.dumps(manifest))
+                        "shard_rows": self.shard_rows,
+                        "text_bytes": text_bytes,
+                        "shards": self.shards,
+                        "extra": self.manifest_extra}
+            tmp = self.root / "manifest.json.tmp"
+            tmp.write_text(json.dumps(manifest))
+            os.replace(tmp, self.root / "manifest.json")
+
+    def _atomic_npy(self, name: str, arr: np.ndarray):
+        tmp = self.root / (name + ".tmp.npy")
+        np.save(tmp, arr)
+        os.replace(tmp, self.root / name)
 
     # -- read path ------------------------------------------------------------
     @classmethod
@@ -106,18 +221,35 @@ class PrecomputedStore:
         st.root = root
         st.dim = man["dim"]
         st.emb_dtype = np.dtype(man["emb_dtype"])
+        st.shard_rows = man.get("shard_rows", SHARD_ROWS)
         st.count = man["count"]
         st.shards = man["shards"]
-        st._offsets = np.load(root / "offsets.npy").tolist()
+        st.manifest_extra = man.get("extra", {})
+        # offsets may be one flush ahead of the manifest if a writer was
+        # killed between the two renames — the manifest count is the commit
+        # point, so drop any rows past it
+        st._offsets = np.load(root / "offsets.npy").tolist()[:st.count]
         # "a+" (not "r"): a reopened store must keep serving appends —
         # §3.1 add_misses writes back into a store opened for reading.
         st._text_f = open(root / "text.jsonl", "a+", encoding="utf-8")
+        text_bytes = man.get("text_bytes")
+        if text_bytes is not None:
+            st._text_f.seek(0, 2)
+            if st._text_f.tell() > text_bytes:
+                # trailing rows a killed writer appended but never committed
+                st._text_f.truncate(text_bytes)
         st._pending_embs, st._pending_rows = [], 0
         st._lock = threading.Lock()
         return st
 
-    def embeddings(self, mmap: bool = True) -> np.ndarray:
-        """All flushed embeddings, (count, dim). Memory-mapped by default."""
+    def embeddings(self, mmap: bool = True):
+        """All embeddings, (count, dim): flushed shards plus pending rows.
+
+        ``mmap=True`` (default) returns a zero-copy ``ShardedEmbeddings``
+        view over the per-shard memmaps — nothing is materialized in RAM
+        until a caller asks for rows. ``mmap=False`` returns a plain
+        materialized ndarray.
+        """
         parts = [np.load(self.root / s["file"],
                          mmap_mode="r" if mmap else None)
                  for s in self.shards]
@@ -125,6 +257,8 @@ class PrecomputedStore:
             parts += self._pending_embs
         if not parts:
             return np.zeros((0, self.dim), self.emb_dtype)
+        if mmap:
+            return ShardedEmbeddings(parts, self.dim, self.emb_dtype)
         return np.concatenate([np.asarray(p) for p in parts], axis=0)
 
     def get_pair(self, row: int) -> Tuple[str, str]:

@@ -23,6 +23,10 @@ class Tokenizer:
         self.word_to_id = {w: N_SPECIAL + N_BYTES + i
                            for i, w in enumerate(self.words)}
         self.vocab_size = N_SPECIAL + N_BYTES + len(self.words)
+        # count() memoization: adaptive query masking re-budgets the same
+        # chunk texts and recent queries on every candidate — tokenizing
+        # them each time was >60% of offline generation wall-clock
+        self._count_cache: dict = {}
 
     @classmethod
     def from_texts(cls, texts: Iterable[str], max_vocab: int = 8192):
@@ -67,4 +71,9 @@ class Tokenizer:
         return " ".join(out)
 
     def count(self, text: str) -> int:
-        return len(self.encode(text))
+        n = self._count_cache.get(text)
+        if n is None:
+            if len(self._count_cache) >= 65536:   # bound the memo
+                self._count_cache.clear()
+            n = self._count_cache[text] = len(self.encode(text))
+        return n

@@ -1,0 +1,110 @@
+"""Offline precompute launcher: paper-scale store builds (§3.2/§3.3).
+
+  PYTHONPATH=src python -m repro.launch.precompute \
+      --dataset squad --n-pairs 150000 --wave 32 --store runs/squad150k
+
+Builds (or resumes — the default when the store directory already holds a
+checkpointed build) a deduplicated precomputed-query store via the batched
+``PrecomputePipeline``, then fits and persists the serving index into the
+store root so ``BatchedRuntime.from_store(..., cache_dir="store")`` reopens
+it without re-running k-means. Kill it any time: rerunning the same command
+continues from the last checkpoint and produces a store byte-identical to
+an uninterrupted run.
+"""
+import argparse
+import time
+
+from repro.core.embedder import HashEmbedder, MiniLMEncoder
+from repro.core.generator import GenCfg, SyntheticOracleLM, chunk_key
+from repro.core.index import auto_index, select_tier
+from repro.core.kb import build_kb
+from repro.core.precompute import (PrecomputeCfg, PrecomputePipeline,
+                                   STATE_KEY)
+from repro.core.store import PrecomputedStore
+from repro.core.tokenizer import Tokenizer
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="squad",
+                    choices=("squad", "narrativeqa", "triviaqa"))
+    ap.add_argument("--n-docs", type=int, default=None,
+                    help="KB size (default: dataset profile)")
+    ap.add_argument("--n-pairs", type=int, default=150_000,
+                    help="target deduplicated pairs (paper: 150K)")
+    ap.add_argument("--wave", type=int, default=32,
+                    help="candidates per batched step")
+    ap.add_argument("--store", required=True, help="store directory")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--checkpoint-every", type=int, default=64,
+                    help="waves between resume checkpoints")
+    ap.add_argument("--background-recluster", action="store_true",
+                    help="refit the dedup IVF in a thread (faster, gives "
+                         "up kill/resume determinism)")
+    ap.add_argument("--embedder", choices=("hash", "minilm"),
+                    default="hash")
+    ap.add_argument("--fresh", action="store_true",
+                    help="refuse to resume; store dir must be empty")
+    ap.add_argument("--no-index", action="store_true",
+                    help="skip fitting + persisting the serving index")
+    args = ap.parse_args(argv)
+
+    kb = build_kb(args.dataset, seed=args.seed, n_docs=args.n_docs)
+    tok = Tokenizer.from_texts([d.text() for d in kb.docs])
+    emb = HashEmbedder() if args.embedder == "hash" else MiniLMEncoder(tok)
+    chunks = [chunk_key(d.doc_id, d.text()) for d in kb.docs]
+
+    try:
+        store = PrecomputedStore.open_(args.store)
+        done = store.manifest_extra.get(STATE_KEY, {}).get("generated", "?")
+        print(f"resuming store {args.store}: {store.count} rows "
+              f"(checkpoint says {done})")
+    except FileNotFoundError:
+        store = PrecomputedStore(args.store, dim=emb.dim)
+        print(f"fresh store {args.store}")
+
+    pipe = PrecomputePipeline(
+        SyntheticOracleLM(kb), emb, tok, GenCfg(dedup=True),
+        PrecomputeCfg(wave=args.wave,
+                      checkpoint_every=args.checkpoint_every,
+                      background_recluster=args.background_recluster))
+
+    t0 = time.perf_counter()
+    last = [t0]
+
+    def on_wave(waves, generated, discarded, mode):
+        if time.perf_counter() - last[0] >= 5.0:
+            last[0] = time.perf_counter()
+            rate = generated / (time.perf_counter() - t0 + 1e-9)
+            print(f"  wave {waves}: {generated}/{args.n_pairs} pairs "
+                  f"({discarded} discarded, dedup={mode}, "
+                  f"{rate:.0f} pairs/s this run)")
+
+    _, _, _, stats = pipe.run(chunks, args.n_pairs, store=store,
+                              seed=args.seed, resume=not args.fresh,
+                              on_wave=on_wave)
+    sb = store.storage_bytes()
+    print(f"build done: {store.count} rows "
+          f"({stats.generated} this run, {stats.discarded} discarded, "
+          f"{stats.pairs_per_sec:.0f} pairs/s, "
+          f"dedup index ended {stats.index_mode}); "
+          f"store {sb['total_bytes'] / 1e6:.1f} MB "
+          f"({sb['index_bytes'] / 1e6:.1f} embeddings + "
+          f"{sb['metadata_bytes'] / 1e6:.1f} metadata)")
+
+    if not args.no_index:
+        tier = select_tier(store.count)
+        t1 = time.perf_counter()
+        idx = auto_index(store, cache_dir=store.root)
+        how = "loaded" if getattr(idx, "loaded_from", None) else "built"
+        print(f"serving index: {tier} {how} in "
+              f"{time.perf_counter() - t1:.1f}s "
+              f"(cache: {store.root}/index_ivf.npz)"
+              if tier == "ivf" else
+              f"serving index: {tier} ({time.perf_counter() - t1:.1f}s; "
+              "nothing to cache below the IVF boundary)")
+    store.close()
+
+
+if __name__ == "__main__":
+    main()

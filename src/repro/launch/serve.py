@@ -20,7 +20,7 @@ from repro.configs import get_config, reduced
 from repro.core.embedder import HashEmbedder
 from repro.core.generator import (GenCfg, QueryGenerator, SyntheticOracleLM,
                                   chunk_key)
-from repro.core.index import FlatIndex, IVFIndex
+from repro.core.index import FlatIndex, IVFIndex, auto_index
 from repro.core.kb import build_kb, sample_user_queries
 from repro.core.runtime import RuntimeCfg, StorInferRuntime
 from repro.core.store import PrecomputedStore
@@ -37,7 +37,10 @@ def main():
     ap.add_argument("--n-pairs", type=int, default=800)
     ap.add_argument("--n-queries", type=int, default=40)
     ap.add_argument("--s-th-run", type=float, default=0.9)
-    ap.add_argument("--index", choices=("flat", "ivf"), default="flat")
+    ap.add_argument("--index", choices=("auto", "flat", "ivf"),
+                    default="auto",
+                    help="auto picks the tier from store size and loads a "
+                         "persisted IVF fit from the store root if present")
     ap.add_argument("--store", default=None,
                     help="store dir (default: temp, rebuilt)")
     args = ap.parse_args()
@@ -71,8 +74,11 @@ def main():
               f"({st.discarded} discarded), "
               f"{store.storage_bytes()['total_bytes'] / 1e6:.2f} MB")
 
-    embs = store.embeddings()
-    index = FlatIndex(embs) if args.index == "flat" else IVFIndex(embs)
+    if args.index == "auto":
+        index = auto_index(store, cache_dir=store.root)
+    else:
+        embs = store.embeddings()
+        index = FlatIndex(embs) if args.index == "flat" else IVFIndex(embs)
     rt = StorInferRuntime(index, store, emb, engine=engine,
                           cfg=RuntimeCfg(s_th_run=args.s_th_run))
 

@@ -1,0 +1,38 @@
+"""Docs stay truthful: every repo path referenced in README.md / docs/*.md
+must exist in the tree (module renames may not silently rot the
+architecture docs), and the checker itself must catch a dangling path."""
+import importlib.util
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+_spec = importlib.util.spec_from_file_location(
+    "check_doc_paths", ROOT / "tools" / "check_doc_paths.py")
+check_doc_paths = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_doc_paths)
+
+
+def test_doc_paths_exist():
+    bad = check_doc_paths.check()
+    assert not bad, "dangling doc references: " + ", ".join(
+        f"{d} -> {p}" for d, p in bad)
+
+
+def test_docs_exist_and_are_linked():
+    assert (ROOT / "docs" / "ARCHITECTURE.md").exists()
+    assert (ROOT / "docs" / "BENCHMARKS.md").exists()
+    readme = (ROOT / "README.md").read_text()
+    assert "docs/ARCHITECTURE.md" in readme
+    assert "docs/BENCHMARKS.md" in readme
+
+
+def test_checker_catches_dangling_path(tmp_path):
+    doc = tmp_path / "BROKEN.md"
+    doc.write_text("see `src/repro/core/does_not_exist.py` and "
+                   "`.github/workflows/nope.yml` for details")
+    bad = check_doc_paths.check([doc])
+    assert {p for _, p in bad} == {"src/repro/core/does_not_exist.py",
+                                   ".github/workflows/nope.yml"}
+    ok = tmp_path / "OK.md"
+    ok.write_text("CI lives in `.github/workflows/ci.yml`")
+    assert check_doc_paths.check([ok]) == []

@@ -54,3 +54,24 @@ def test_minilm_contrastive_training_improves_alignment():
     assert _np.mean(losses[-10:]) < _np.mean(losses[:10]), \
         (losses[:3], losses[-3:])
     assert after > before - 0.02, (before, after)
+
+
+def test_minilm_encode_bucketing_consistent():
+    """Padded power-of-two buckets + max_batch chunking must not change
+    per-row embeddings (padding rows carry zero mask; rows are sliced off
+    before return)."""
+    kb = build_kb("squad", n_docs=3)
+    tok = Tokenizer.from_texts([d.text() for d in kb.docs], max_vocab=512)
+    enc = MiniLMEncoder(tok, EncoderCfg(vocab_size=tok.vocab_size,
+                                        dim=32, n_layers=1, n_heads=2,
+                                        d_ff=64, max_len=16), seed=0,
+                        max_batch=4)
+    texts = [render_query(f, i % len(TEMPLATES))
+             for i, f in enumerate(kb.facts[:11])]
+    full = enc.encode(texts)                    # 11 -> chunks of 4,4,3
+    assert full.shape == (11, 32)
+    np.testing.assert_allclose(enc.encode(texts[:3]), full[:3],
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(enc.encode([texts[7]]), full[7:8],
+                               rtol=1e-5, atol=1e-6)
+    assert enc.encode([]).shape == (0, 32)

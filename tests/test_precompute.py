@@ -1,0 +1,412 @@
+"""Offline precompute pipeline: wave-mode generator semantics vs the
+sequential reference, checkpoint/resume byte-identity, the incremental
+dedup index, IVF persistence + n_lists clamping, and the store's lazy
+multi-shard embedding view."""
+import json
+
+import numpy as np
+import pytest
+
+import repro.core.index as RI
+from repro.core.embedder import HashEmbedder
+from repro.core.generator import (GenCfg, QueryGenerator, SyntheticOracleLM,
+                                  chunk_key)
+from repro.core.index import (FlatIndex, IncrementalIndex, IVFIndex,
+                              auto_index)
+from repro.core.kb import build_kb
+from repro.core.precompute import (BuildKilled, PrecomputeCfg,
+                                   PrecomputePipeline, STATE_KEY)
+from repro.core.store import PrecomputedStore, ShardedEmbeddings
+from repro.core.tokenizer import Tokenizer
+
+
+@pytest.fixture(scope="module")
+def kb_env():
+    kb = build_kb("squad", n_docs=6)
+    emb = HashEmbedder()
+    tok = Tokenizer.from_texts([d.text() for d in kb.docs])
+    chunks = [chunk_key(d.doc_id, d.text()) for d in kb.docs]
+    return kb, emb, tok, chunks
+
+
+def mkpipe(kb, emb, tok, wave, **cfg_kw):
+    return PrecomputePipeline(SyntheticOracleLM(kb), emb, tok,
+                              GenCfg(dedup=True),
+                              PrecomputeCfg(wave=wave, **cfg_kw))
+
+
+# ---------------------------------------------------------------------------
+# Wave-mode generator semantics
+# ---------------------------------------------------------------------------
+
+
+def test_wave1_matches_sequential_reference(kb_env):
+    """At wave=1 the pipeline consumes the RNG in the same order and makes
+    the same accept/discard/temperature decisions as the sequential
+    generator — bitwise-identical output on a fixed seed."""
+    kb, emb, tok, chunks = kb_env
+    gen = QueryGenerator(SyntheticOracleLM(kb), emb, tok, GenCfg(dedup=True))
+    sq, sr, se, ss = gen.generate(chunks, 120, seed=3)
+    bq, br, be, bs = mkpipe(kb, emb, tok, wave=1).run(chunks, 120, seed=3)
+    assert sq == bq
+    assert sr == br
+    np.testing.assert_array_equal(se, be)
+    assert (ss.generated, ss.discarded) == (bs.generated, bs.discarded)
+    assert ss.temp_final == bs.temp_final
+
+
+def test_wave_mode_dedup_and_temperature_invariants(kb_env):
+    """Batched waves preserve §3.2 semantics: no accepted pair reaches
+    S_th_Gen (including wave-internal collisions), collisions bump the
+    per-chunk temperature, and the temperature respects its cap."""
+    kb, emb, tok, chunks = kb_env
+    q, r, e, stats = mkpipe(kb, emb, tok, wave=16).run(chunks, 150, seed=0)
+    assert len(q) == len(r) == len(e) == 150
+    sims = e @ e.T - np.eye(len(e))
+    assert sims.max() < 0.99, "accepted pair above S_th_Gen"
+    assert stats.discarded > 0, "dedup never triggered (test too easy)"
+    assert 0.7 < stats.temp_final <= 1.0 + 1e-9
+
+
+def test_wave_mode_random_baseline(kb_env):
+    kb, emb, tok, chunks = kb_env
+    pipe = PrecomputePipeline(SyntheticOracleLM(kb), emb, tok,
+                              GenCfg(dedup=False), PrecomputeCfg(wave=16))
+    q, _, e, stats = pipe.run(chunks, 150, seed=0)
+    assert stats.discarded == 0
+    sims = e @ e.T - np.eye(len(e))
+    assert sims.max() >= 0.99, "random generation produced no duplicates?"
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint / resume
+# ---------------------------------------------------------------------------
+
+
+def test_kill_and_resume_store_is_byte_identical(kb_env, tmp_path):
+    kb, emb, tok, chunks = kb_env
+    A, B = tmp_path / "uninterrupted", tmp_path / "resumed"
+
+    sa = PrecomputedStore(A, dim=emb.dim, shard_rows=64)
+    mkpipe(kb, emb, tok, wave=8, checkpoint_every=3).run(
+        chunks, 160, store=sa, seed=7)
+    sa.close()
+
+    sb = PrecomputedStore(B, dim=emb.dim, shard_rows=64)
+    with pytest.raises(BuildKilled):
+        mkpipe(kb, emb, tok, wave=8, checkpoint_every=3).run(
+            chunks, 160, store=sb, seed=7, _kill_after_waves=7)
+    sb._text_f.close()     # the kill: buffers reach disk, memory state dies
+
+    sb2 = PrecomputedStore.open_(B)
+    _, _, _, stats = mkpipe(kb, emb, tok, wave=8, checkpoint_every=3).run(
+        chunks, 160, store=sb2, seed=7)
+    sb2.close()
+    assert 0 < stats.resumed_rows < 160
+    assert stats.resumed_rows + stats.generated == 160
+
+    for f in ["text.jsonl", "offsets.npy"] + sorted(
+            p.name for p in A.glob("emb_*.npy")):
+        assert (A / f).read_bytes() == (B / f).read_bytes(), f
+    ma = json.loads((A / "manifest.json").read_text())
+    mb = json.loads((B / "manifest.json").read_text())
+    assert ma["count"] == mb["count"] == 160
+    assert ma["shards"] == mb["shards"]
+    # checkpoint-heavy flushing must not fragment: layout is a pure
+    # function of the row count (full shards + at most one tail)
+    assert len(ma["shards"]) == -(-160 // 64)
+    sa_state = {k: v for k, v in ma["extra"][STATE_KEY].items()
+                if k != "elapsed"}
+    sb_state = {k: v for k, v in mb["extra"][STATE_KEY].items()
+                if k != "elapsed"}
+    assert sa_state == sb_state    # incl. the RNG bit-generator state
+
+
+def test_resume_refuses_different_chunk_contents(kb_env, tmp_path):
+    """Same chunk COUNT, different world (another KB seed): the content
+    digest must refuse to splice the two corpora into one store."""
+    kb, emb, tok, chunks = kb_env
+    s = PrecomputedStore(tmp_path / "s", dim=emb.dim, shard_rows=32)
+    mkpipe(kb, emb, tok, wave=4, checkpoint_every=2).run(
+        chunks, 40, store=s, seed=0)
+    kb2 = build_kb("squad", seed=99, n_docs=6)
+    chunks2 = [chunk_key(d.doc_id, d.text()) for d in kb2.docs]
+    with pytest.raises(ValueError, match="DIFFERENT chunk contents"):
+        mkpipe(kb2, emb, tok, wave=4, checkpoint_every=2).run(
+            chunks2, 80, store=s, seed=0)
+    s.close()
+
+
+def test_resume_refuses_different_config(kb_env, tmp_path):
+    """Same chunks, different embedder or generation config: resuming
+    would splice two embedding spaces / decision regimes into one store."""
+    kb, emb, tok, chunks = kb_env
+    s = PrecomputedStore(tmp_path / "s", dim=emb.dim, shard_rows=32)
+    mkpipe(kb, emb, tok, wave=4, checkpoint_every=2).run(
+        chunks, 40, store=s, seed=0)
+
+    class OtherEmbedder(HashEmbedder):
+        pass
+
+    with pytest.raises(ValueError, match="mismatched settings"):
+        PrecomputePipeline(
+            SyntheticOracleLM(kb), OtherEmbedder(), tok, GenCfg(dedup=True),
+            PrecomputeCfg(wave=4, checkpoint_every=2)).run(
+                chunks, 80, store=s, seed=0)
+    with pytest.raises(ValueError, match="mismatched settings"):
+        PrecomputePipeline(
+            SyntheticOracleLM(kb), emb, tok, GenCfg(dedup=True,
+                                                    s_th_gen=0.95),
+            PrecomputeCfg(wave=4, checkpoint_every=2)).run(
+                chunks, 80, store=s, seed=0)
+    s.close()
+
+
+def test_resume_refuses_foreign_or_modified_store(kb_env, tmp_path):
+    kb, emb, tok, chunks = kb_env
+    # a store with rows but no checkpoint is not resumable
+    s = PrecomputedStore(tmp_path / "s", dim=emb.dim)
+    s.add_batch(emb.encode(["a?"]), ["a?"], ["a."])
+    s.flush()
+    with pytest.raises(ValueError, match="no .* checkpoint"):
+        mkpipe(kb, emb, tok, wave=4).run(chunks, 10, store=s, seed=0)
+    s.close()
+    # rows added behind the checkpoint's back are detected
+    s2 = PrecomputedStore(tmp_path / "s2", dim=emb.dim, shard_rows=32)
+    mkpipe(kb, emb, tok, wave=4, checkpoint_every=2).run(
+        chunks, 40, store=s2, seed=0)
+    s2.add_batch(emb.encode(["rogue"]), ["rogue"], ["row"])
+    s2.flush()
+    with pytest.raises(ValueError, match="modified outside"):
+        mkpipe(kb, emb, tok, wave=4, checkpoint_every=2).run(
+            chunks, 80, store=s2, seed=0)
+    s2.close()
+
+
+# ---------------------------------------------------------------------------
+# IncrementalIndex
+# ---------------------------------------------------------------------------
+
+
+def _unit_rows(n, d, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+
+def test_incremental_flat_matches_bruteforce():
+    x = _unit_rows(500, 64)
+    idx = IncrementalIndex(64, flat_max_rows=10_000)
+    for lo in range(0, 500, 37):          # ragged add batches
+        idx.add(x[lo:lo + 37])
+    assert idx.mode == "flat" and len(idx) == 500
+    q = _unit_rows(8, 64, seed=1)
+    np.testing.assert_allclose(idx.max_sim(q), (q @ x.T).max(axis=1),
+                               atol=1e-5)
+
+
+def test_incremental_ivf_transition_finds_duplicates():
+    x = _unit_rows(600, 64)
+    idx = IncrementalIndex(64, flat_max_rows=128)
+    idx.add(x)
+    assert idx.mode == "ivf"
+    assert idx.refits >= 2                # fits at 128 and 256, 512
+    # the dedup-critical property: an exact duplicate of ANY stored row
+    # probes the list holding its twin (same inner-product metric for
+    # assignment and probing), so max_sim ~= 1
+    assert float(idx.max_sim(x[::71]).min()) > 0.999
+
+
+def test_incremental_state_independent_of_add_batching():
+    """Deterministic split-at-threshold refits: the index state depends
+    only on the row sequence, not on how adds were batched — the property
+    the resume path's shard-at-a-time rebuild relies on."""
+    x = _unit_rows(400, 32)
+    a = IncrementalIndex(32, flat_max_rows=100)
+    a.add(x)                               # one giant add
+    b = IncrementalIndex(32, flat_max_rows=100)
+    for lo in range(0, 400, 13):           # many ragged adds
+        b.add(x[lo:lo + 13])
+    np.testing.assert_array_equal(a.centroids, b.centroids)
+    q = _unit_rows(6, 32, seed=2)
+    np.testing.assert_array_equal(a.max_sim(q), b.max_sim(q))
+
+
+# ---------------------------------------------------------------------------
+# IVFIndex: clamp + persistence
+# ---------------------------------------------------------------------------
+
+
+def test_ivf_nlists_clamped_to_rows():
+    """Regression: n_lists > rows used to crash k-means seeding
+    (jax.random.choice with replace=False)."""
+    x = _unit_rows(5, 32)
+    ivf = IVFIndex(x, n_lists=64, nprobe=8)
+    assert ivf.n_lists == 5 and ivf.nprobe == 5
+    v, i = ivf.search(x[:2], 3)
+    vf, if_ = FlatIndex(x).search(x[:2], 3)
+    np.testing.assert_allclose(v, vf, atol=1e-5)
+    np.testing.assert_array_equal(i, if_)
+
+
+def test_ivf_save_load_roundtrip(tmp_path):
+    x = _unit_rows(400, 48)
+    ivf = IVFIndex(x, n_lists=16, nprobe=8, seed=3)
+    path = ivf.save(tmp_path / "idx.npz")
+    loaded = IVFIndex.load(path, x)
+    assert loaded.loaded_from == str(path)
+    q = _unit_rows(10, 48, seed=4)
+    v1, i1 = ivf.search(q, 5)
+    v2, i2 = loaded.search(q, 5)
+    np.testing.assert_allclose(v1, v2, atol=1e-6)
+    np.testing.assert_array_equal(i1, i2)
+
+
+def test_auto_index_cache_skips_kmeans(kb_env, tmp_path, monkeypatch):
+    kb, emb, tok, chunks = kb_env
+    store = PrecomputedStore(tmp_path / "s", dim=emb.dim, shard_rows=64)
+    qs = [f"q {i} about {i % 13}" for i in range(300)]
+    store.add_batch(emb.encode(qs), qs, ["r"] * 300)
+    store.flush()
+
+    built = auto_index(store, cache_dir=store.root, flat_max_rows=64)
+    assert isinstance(built, IVFIndex) and built.loaded_from is None
+    assert (store.root / "index_ivf.npz").exists()
+
+    def bomb(*a, **k):
+        raise AssertionError("k-means re-ran despite a valid cache")
+    monkeypatch.setattr(RI, "kmeans", bomb)
+    loaded = auto_index(store, cache_dir=store.root, flat_max_rows=64)
+    assert loaded.loaded_from is not None
+    q = emb.encode(qs[:5])
+    v1, i1 = built.search(q, 3)
+    v2, i2 = loaded.search(q, 3)
+    np.testing.assert_allclose(v1, v2, atol=1e-6)
+    np.testing.assert_array_equal(i1, i2)
+    monkeypatch.undo()
+
+    # stale cache (store grew) forces a rebuild, not a wrong load
+    qs2 = [f"new q {i}" for i in range(40)]
+    store.add_batch(emb.encode(qs2), qs2, ["r"] * 40)
+    store.flush()
+    rebuilt = auto_index(store, cache_dir=store.root, flat_max_rows=64)
+    assert rebuilt.loaded_from is None and len(rebuilt) == 340
+    store.close()
+
+
+def test_auto_index_cache_detects_content_drift(kb_env, tmp_path):
+    """Same row count, different vectors: the content fingerprint must
+    force a rebuild instead of silently serving a stale fit."""
+    kb, emb, tok, chunks = kb_env
+
+    def mkstore(root, prefix):
+        s = PrecomputedStore(root, dim=emb.dim)
+        qs = [f"{prefix} question {i} about {i % 13}" for i in range(300)]
+        s.add_batch(emb.encode(qs), qs, ["r"] * 300)
+        s.flush()
+        return s
+
+    a = mkstore(tmp_path / "a", "alpha")
+    auto_index(a, cache_dir=a.root, flat_max_rows=64)
+    a.close()
+    # same-sized store with different content inherits the cache file
+    b = mkstore(tmp_path / "b", "beta")
+    (tmp_path / "b" / "index_ivf.npz").write_bytes(
+        (tmp_path / "a" / "index_ivf.npz").read_bytes())
+    idx = auto_index(b, cache_dir=b.root, flat_max_rows=64)
+    assert idx.loaded_from is None, "stale fit served for drifted content"
+    b.close()
+
+
+def test_fresh_store_truncates_orphan_text(kb_env, tmp_path):
+    """A build killed before its first flush leaves text rows but no
+    manifest; creating a fresh store over that directory must not bake
+    the orphan rows into the new store."""
+    kb, emb, tok, chunks = kb_env
+    root = tmp_path / "s"
+    root.mkdir()
+    (root / "text.jsonl").write_text('{"q": "orphan", "r": "row"}\n' * 5)
+    store = PrecomputedStore(root, dim=emb.dim)
+    store.add_batch(emb.encode(["a?"]), ["a?"], ["a."])
+    store.flush()
+    store.close()
+    st2 = PrecomputedStore.open_(root)
+    assert st2.count == 1
+    assert st2.get_pair(0) == ("a?", "a.")
+    assert b"orphan" not in (root / "text.jsonl").read_bytes()
+    st2.close()
+
+
+# ---------------------------------------------------------------------------
+# Store: lazy multi-shard embeddings + crash recovery
+# ---------------------------------------------------------------------------
+
+
+def test_multishard_embeddings_stay_memmapped(kb_env, tmp_path):
+    """Regression: embeddings(mmap=True) used to np.concatenate every
+    shard into RAM, defeating the memmap for multi-shard stores."""
+    kb, emb, tok, chunks = kb_env
+    store = PrecomputedStore(tmp_path / "s", dim=emb.dim, shard_rows=8)
+    qs = [f"query number {i}" for i in range(30)]
+    E = emb.encode(qs)
+    store.add_batch(E, qs, ["r"] * 30)
+    store.flush()
+
+    v = store.embeddings()
+    assert isinstance(v, ShardedEmbeddings)
+    assert len(list(v.iter_shards())) == 4            # 8+8+8+6
+    assert all(isinstance(p, np.memmap) for p in v.iter_shards()), \
+        "a shard was materialized in RAM"
+    assert v.shape == (30, emb.dim)
+    ref = E.astype(np.float16).astype(np.float32)
+    np.testing.assert_array_equal(np.asarray(v, np.float32), ref)
+    np.testing.assert_array_equal(np.asarray(v[5:21], np.float32),
+                                  ref[5:21])
+    np.testing.assert_array_equal(
+        np.asarray(v.take([0, 9, 17, 29]), np.float32),
+        ref[[0, 9, 17, 29]])
+    # ndarray-compatible indexing semantics: negatives wrap, OOB raises,
+    # boolean masks select (take used to return uninitialized memory)
+    np.testing.assert_array_equal(np.asarray(v[-1], np.float32), ref[-1])
+    np.testing.assert_array_equal(
+        np.asarray(v.take([-2, 5]), np.float32), ref[[-2, 5]])
+    mask = np.zeros(30, bool)
+    mask[[2, 28]] = True
+    np.testing.assert_array_equal(np.asarray(v[mask], np.float32),
+                                  ref[mask])
+    with pytest.raises(IndexError):
+        v.take([30])
+    with pytest.raises(IndexError):
+        v.take([-31])
+    with pytest.raises(IndexError):
+        v[np.zeros(7, bool)]
+    # pending (unflushed) rows are part of the view too
+    store.add_batch(E[:3], qs[:3], ["r"] * 3)
+    assert store.embeddings().shape == (33, emb.dim)
+    # and index builds over the view match a dense build
+    vflat, iflat = FlatIndex(store.embeddings()).search(E[:4], 3)
+    vref, iref = FlatIndex(np.concatenate([ref, ref[:3]])).search(E[:4], 3)
+    np.testing.assert_allclose(vflat, vref, atol=1e-6)
+    np.testing.assert_array_equal(iflat, iref)
+    store.close()
+
+
+def test_store_truncates_uncommitted_text_on_open(kb_env, tmp_path):
+    kb, emb, tok, chunks = kb_env
+    store = PrecomputedStore(tmp_path / "s", dim=emb.dim)
+    qs = ["a?", "b?"]
+    store.add_batch(emb.encode(qs), qs, ["a.", "b."])
+    store.flush()
+    committed = (tmp_path / "s" / "text.jsonl").read_bytes()
+    # a killed writer's un-flushed appends
+    with open(tmp_path / "s" / "text.jsonl", "a") as f:
+        f.write('{"q": "torn', )
+    store._text_f.close()
+
+    st2 = PrecomputedStore.open_(tmp_path / "s")
+    assert (tmp_path / "s" / "text.jsonl").read_bytes() == committed
+    assert st2.get_pair(1) == ("b?", "b.")
+    st2.add_batch(emb.encode(["c?"]), ["c?"], ["c."])   # appends still work
+    st2.flush()
+    assert st2.get_pair(2) == ("c?", "c.")
+    st2.close()

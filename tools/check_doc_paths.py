@@ -1,0 +1,67 @@
+"""Verify that every repo path referenced in the docs exists in the tree.
+
+Scans README.md and docs/*.md for path-like references (backticked or
+markdown-linked, anchored at a known top-level directory or a known
+top-level file) and fails if any points at nothing — the docs satellite's
+guard against module renames silently rotting the architecture docs.
+
+  python tools/check_doc_paths.py          # exit 1 on dangling references
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+DOC_FILES = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+
+# a reference must be anchored at one of these to count as a repo path
+DIR_PREFIXES = ("src/", "benchmarks/", "examples/", "tests/", "docs/",
+                "tools/", ".github/")
+TOP_FILES = {"README.md", "ROADMAP.md", "PAPER.md", "PAPERS.md",
+             "SNIPPETS.md", "CHANGES.md", "pyproject.toml"}
+
+_PATH = re.compile(r"[\w./-]+\.(?:py|md|toml|yml|yaml|json|npy|npz|jsonl)")
+
+
+def referenced_paths(text: str):
+    for m in _PATH.finditer(text):
+        # removeprefix, NOT lstrip: lstrip("./") strips the leading dot
+        # of ".github/..." and would silently skip those references
+        p = m.group(0).removeprefix("./")
+        if "*" in p or "XXXX" in p:
+            continue                      # glob/placeholder patterns
+        if p.startswith(DIR_PREFIXES) or p in TOP_FILES:
+            yield p
+
+
+def check(doc_files=DOC_FILES):
+    """Returns a list of (doc, dangling_path) pairs; empty means clean."""
+    bad = []
+    for doc in doc_files:
+        try:
+            label = str(doc.relative_to(ROOT))
+        except ValueError:
+            label = doc.name
+        for p in sorted(set(referenced_paths(doc.read_text()))):
+            # store/experiment artifacts are generated, not tracked
+            if (ROOT / p).exists() or p.startswith("experiments/"):
+                continue
+            bad.append((label, p))
+    return bad
+
+
+def main() -> int:
+    bad = check()
+    n_docs = len(DOC_FILES)
+    if bad:
+        for doc, p in bad:
+            print(f"{doc}: dangling reference -> {p}", file=sys.stderr)
+        return 1
+    print(f"doc path check: {n_docs} docs scanned, all references exist")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
