@@ -1,6 +1,7 @@
 """Batched StorInfer serving throughput: sequential one-query-at-a-time
-(`StorInferRuntime.query`, the paper's Fig-2 loop) vs the batched runtime
-(`BatchedRuntime.query_batch`) on the SAME synthetic store.
+(`StorInfer.query`, the paper's Fig-2 loop) vs the batched path
+(`StorInfer.query_batch`) on the SAME system — one facade, one shared
+auto-tiered index.
 
 Amortization is the whole story: one embedding batch + one MIPS dispatch
 per microbatch instead of per query. Emits a BENCH_batched_serve.json
@@ -25,16 +26,15 @@ for p in (str(_ROOT), str(_ROOT / "src")):
 import numpy as np
 
 from benchmarks.common import out_write
-from repro.core.embedder import HashEmbedder
-from repro.core.index import auto_index, select_tier
-from repro.core.runtime import (BatchedRuntime, BatchedRuntimeCfg,
-                                RuntimeCfg, StorInferRuntime)
+from repro.api import StorInfer, SystemCfg, make_embedder, tier_of
+from repro.core.runtime import BatchedRuntimeCfg
 from repro.core.store import PrecomputedStore
 
 
 def build_synth_store(root, emb, n_rows: int, batch: int = 2048):
-    """Synthetic query/response pairs; embeddings from the real embedder so
-    sequential and batched paths search identical data."""
+    """Write synthetic query/response pairs to ``root`` and close the
+    store (reopen via ``StorInfer.open``); embeddings come from the real
+    embedder so sequential and batched paths search identical data."""
     store = PrecomputedStore(root, dim=emb.dim)
     for lo in range(0, n_rows, batch):
         hi = min(lo + batch, n_rows)
@@ -42,8 +42,7 @@ def build_synth_store(root, emb, n_rows: int, batch: int = 2048):
               f"entity {i % 31}" for i in range(lo, hi)]
         rs = [f"stored answer number {i}." for i in range(lo, hi)]
         store.add_batch(emb.encode(qs), qs, rs)
-    store.flush()
-    return store
+    store.close()
 
 
 def user_queries(n: int, n_store: int, hit_frac: float = 0.5, seed: int = 0):
@@ -79,47 +78,43 @@ def main(argv=None):
     n_q = args.n_queries or (128 if args.smoke else 512)
     B = args.batch
 
-    emb = HashEmbedder()
     with tempfile.TemporaryDirectory() as td:
-        store = build_synth_store(td, emb, n_store)
-        index = auto_index(store)
-        tier = select_tier(store.count)
-        queries = user_queries(n_q, n_store)
+        build_synth_store(td, make_embedder("hash"), n_store)
+        cfg = SystemCfg(s_th_run=0.9,
+                        batched=BatchedRuntimeCfg(max_batch=B))
+        with StorInfer.open(td, cfg) as si:
+            tier = tier_of(si.index)
+            queries = user_queries(n_q, n_store)
 
-        # warm the jit caches on both paths before timing
-        seq_rt = StorInferRuntime(index, store, emb, engine=None,
-                                  cfg=RuntimeCfg(s_th_run=0.9))
-        bat_rt = BatchedRuntime(index, store, emb, engine=None,
-                                cfg=BatchedRuntimeCfg(s_th_run=0.9,
-                                                      max_batch=B))
-        seq_rt.query(queries[0])
-        bat_rt.query_batch(queries[:B])
+            # warm the jit caches on both paths before timing
+            si.query(queries[0])
+            si.query_batch(queries[:B])
 
-        # -- sequential: the paper's one-at-a-time race loop ---------------
-        seq_lat = []
-        t0 = time.perf_counter()
-        seq_hits = 0
-        for q in queries:
-            t1 = time.perf_counter()
-            r = seq_rt.query(q)
-            seq_lat.append(time.perf_counter() - t1)
-            seq_hits += int(r.hit)
-        seq_total = time.perf_counter() - t0
-        seq_qps = n_q / seq_total
+            # -- sequential: the paper's one-at-a-time race loop -----------
+            seq_lat = []
+            t0 = time.perf_counter()
+            seq_hits = 0
+            for q in queries:
+                t1 = time.perf_counter()
+                r = si.query(q)
+                seq_lat.append(time.perf_counter() - t1)
+                seq_hits += int(r.hit)
+            seq_total = time.perf_counter() - t0
+            seq_qps = n_q / seq_total
 
-        # -- batched: microbatches of B through one index dispatch ---------
-        bat_lat = []
-        t0 = time.perf_counter()
-        bat_hits = 0
-        for lo in range(0, n_q, B):
-            chunk = queries[lo:lo + B]
-            t1 = time.perf_counter()
-            rs = bat_rt.query_batch(chunk)
-            dt = time.perf_counter() - t1
-            bat_lat.extend([dt] * len(chunk))   # each request waits its batch
-            bat_hits += sum(r.hit for r in rs)
-        bat_total = time.perf_counter() - t0
-        bat_qps = n_q / bat_total
+            # -- batched: microbatches of B through one index dispatch -----
+            bat_lat = []
+            t0 = time.perf_counter()
+            bat_hits = 0
+            for lo in range(0, n_q, B):
+                chunk = queries[lo:lo + B]
+                t1 = time.perf_counter()
+                rs = si.query_batch(chunk)
+                dt = time.perf_counter() - t1
+                bat_lat.extend([dt] * len(chunk))  # each waits its batch
+                bat_hits += sum(r.hit for r in rs)
+            bat_total = time.perf_counter() - t0
+            bat_qps = n_q / bat_total
 
         assert seq_hits == bat_hits, (seq_hits, bat_hits)
         speedup = bat_qps / seq_qps

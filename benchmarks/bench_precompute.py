@@ -5,13 +5,13 @@ Four checks, emitted as one BENCH_precompute.json point:
   1. **speedup** — batched `PrecomputePipeline` (wave 32) vs the sequential
      `QueryGenerator.generate` reference on the same KB/target/seed.
      Acceptance floor: >= 3x pairs/sec.
-  2. **scale** — a large deduplicated store build through the pipeline
+  2. **scale** — a large deduplicated store build through `StorInfer.build`
      (>= 100K rows in full mode; scaled down under --smoke), reporting
      pairs/sec, discard rate, and the storage split.
-  3. **index cache** — `auto_index(store, cache_dir=store.root)` twice:
-     the first call fits + persists IVF k-means, the second must LOAD it
-     (no k-means — asserted, not just timed) and return identical search
-     results.
+  3. **index cache** — `make_index("auto", store, cache_dir=store.root)`
+     twice: the first call fits + persists IVF k-means, the second must
+     LOAD it (no k-means — asserted, not just timed) and return identical
+     search results.
   4. **resume** — the build is killed mid-flight and resumed; the resumed
      store must be byte-identical (text, offsets, every embedding shard)
      to an uninterrupted run.
@@ -34,14 +34,12 @@ for p in (str(_ROOT), str(_ROOT / "src")):
 import numpy as np
 
 from benchmarks.common import out_write
-from repro.core.embedder import HashEmbedder
+from repro.api import StorInfer, SystemCfg, make_embedder, make_index, \
+    make_pipeline
 from repro.core.generator import (GenCfg, QueryGenerator, SyntheticOracleLM,
                                   chunk_key)
-from repro.core.index import auto_index
 from repro.core.kb import build_kb
-from repro.core.precompute import (BuildKilled, PrecomputeCfg,
-                                   PrecomputePipeline)
-from repro.core.store import PrecomputedStore
+from repro.core.precompute import BuildKilled, PrecomputeCfg
 
 
 def kb_env(n_docs: int, seed: int = 0):
@@ -54,7 +52,7 @@ def kb_env(n_docs: int, seed: int = 0):
 
 def bench_speedup(n_pairs: int, wave: int, n_docs: int = 60):
     kb, tok, chunks = kb_env(n_docs=n_docs)
-    emb = HashEmbedder()
+    emb = make_embedder("hash")
 
     t0 = time.perf_counter()
     gen = QueryGenerator(SyntheticOracleLM(kb), emb, tok, GenCfg(dedup=True))
@@ -62,8 +60,8 @@ def bench_speedup(n_pairs: int, wave: int, n_docs: int = 60):
     seq_s = time.perf_counter() - t0
 
     t0 = time.perf_counter()
-    pipe = PrecomputePipeline(SyntheticOracleLM(kb), emb, tok,
-                              GenCfg(dedup=True), PrecomputeCfg(wave=wave))
+    pipe = make_pipeline(SystemCfg(precompute=PrecomputeCfg(wave=wave)),
+                         SyntheticOracleLM(kb), tok)
     bq, _, be, bstats = pipe.run(chunks, n_pairs, seed=0)
     bat_s = time.perf_counter() - t0
 
@@ -83,19 +81,18 @@ def bench_speedup(n_pairs: int, wave: int, n_docs: int = 60):
 def bench_scale(root: Path, n_rows: int, wave: int, n_docs: int,
                 background: bool):
     kb, tok, chunks = kb_env(n_docs=n_docs)
-    emb = HashEmbedder()
-    store = PrecomputedStore(root, dim=emb.dim)
-    pipe = PrecomputePipeline(
-        SyntheticOracleLM(kb), emb, tok, GenCfg(dedup=True),
-        PrecomputeCfg(wave=wave, background_recluster=background))
+    # index="none": the serving index is fit (and timed) separately by
+    # bench_index_cache, which asserts the first fit does NOT hit a cache
+    cfg = SystemCfg(index="none", precompute=PrecomputeCfg(
+        wave=wave, background_recluster=background))
     t0 = time.perf_counter()
-    _, _, _, stats = pipe.run(chunks, n_rows, store=store, seed=0)
+    si = StorInfer.build(kb, cfg, root, n_pairs=n_rows, tokenizer=tok,
+                         seed=0)
     build_s = time.perf_counter() - t0
-    store.close()
-    store = PrecomputedStore.open_(root)
-    sb = store.storage_bytes()
+    stats = si.build_stats
+    sb = si.store.storage_bytes()
     out = {
-        "rows": store.count, "seconds": build_s,
+        "rows": si.store.count, "seconds": build_s,
         "pairs_per_sec": stats.generated / build_s,
         "discarded": stats.discarded,
         "dedup_index_mode": stats.index_mode,
@@ -103,18 +100,18 @@ def bench_scale(root: Path, n_rows: int, wave: int, n_docs: int,
         "embeddings_mb": sb["index_bytes"] / 1e6,
         "metadata_mb": sb["metadata_bytes"] / 1e6,
     }
-    return store, out
+    return si.store, out
 
 
 def bench_index_cache(store, flat_max_rows: int):
     t0 = time.perf_counter()
-    built = auto_index(store, cache_dir=store.root,
+    built = make_index("auto", store, cache_dir=store.root,
                        flat_max_rows=flat_max_rows)
     build_s = time.perf_counter() - t0
     assert built.loaded_from is None, "first build unexpectedly hit a cache"
 
     t0 = time.perf_counter()
-    loaded = auto_index(store, cache_dir=store.root,
+    loaded = make_index("auto", store, cache_dir=store.root,
                         flat_max_rows=flat_max_rows)
     load_s = time.perf_counter() - t0
     assert loaded.loaded_from is not None, \
@@ -131,28 +128,24 @@ def bench_index_cache(store, flat_max_rows: int):
 
 def bench_resume(td: Path, n_rows: int, wave: int):
     kb, tok, chunks = kb_env(n_docs=20)
-    emb = HashEmbedder()
-
-    def mkpipe():
-        return PrecomputePipeline(
-            SyntheticOracleLM(kb), emb, tok, GenCfg(dedup=True),
-            PrecomputeCfg(wave=wave, checkpoint_every=4))
+    cfg = SystemCfg(index="none", shard_rows=256,
+                    precompute=PrecomputeCfg(wave=wave,
+                                             checkpoint_every=4))
 
     A, B = td / "uninterrupted", td / "resumed"
-    sa = PrecomputedStore(A, dim=emb.dim, shard_rows=256)
-    mkpipe().run(chunks, n_rows, store=sa, seed=5)
-    sa.close()
+    StorInfer.build(kb, cfg, A, n_pairs=n_rows, tokenizer=tok,
+                    seed=5).close()
 
-    sb = PrecomputedStore(B, dim=emb.dim, shard_rows=256)
     try:
-        mkpipe().run(chunks, n_rows, store=sb, seed=5,
-                     _kill_after_waves=(n_rows // wave) // 2 + 1)
+        # the kill: StorInfer.build aborts the store handle (buffers reach
+        # disk, nothing past the last checkpoint commits) and re-raises
+        StorInfer.build(kb, cfg, B, n_pairs=n_rows, tokenizer=tok, seed=5,
+                        _kill_after_waves=(n_rows // wave) // 2 + 1)
     except BuildKilled:
         pass
-    sb._text_f.close()            # the kill: buffers reach disk, state dies
-    sb2 = PrecomputedStore.open_(B)
-    _, _, _, stats = mkpipe().run(chunks, n_rows, store=sb2, seed=5)
-    sb2.close()
+    si = StorInfer.build(kb, cfg, B, n_pairs=n_rows, tokenizer=tok, seed=5)
+    stats = si.build_stats
+    si.close()
 
     files = ["text.jsonl", "offsets.npy"] + sorted(
         p.name for p in A.glob("emb_*.npy"))

@@ -1,5 +1,6 @@
 """Shared benchmark setup: builds (or loads cached) precomputed stores per
-dataset profile x generation mode, mirroring the paper's §4 pipeline.
+dataset profile x generation mode through the ``StorInfer`` facade,
+mirroring the paper's §4 pipeline.
 
 Scale knob: REPRO_BENCH_SCALE env (default 1.0) multiplies store/user-query
 counts — the defaults keep `python -m benchmarks.run` to minutes on CPU;
@@ -14,13 +15,10 @@ from pathlib import Path
 
 import numpy as np
 
-from repro.core.embedder import HashEmbedder
-from repro.core.generator import GenCfg, SyntheticOracleLM, chunk_key
-from repro.core.index import FlatIndex
+from repro.api import StorInfer, SystemCfg, make_index
+from repro.core.generator import GenCfg
 from repro.core.kb import build_kb, sample_user_queries
-from repro.core.precompute import PrecomputeCfg, PrecomputePipeline
-from repro.core.store import PrecomputedStore
-from repro.core.tokenizer import Tokenizer
+from repro.core.precompute import PrecomputeCfg
 
 SCALE = float(os.environ.get("REPRO_BENCH_SCALE", "1.0"))
 N_STORE = int(8000 * SCALE)
@@ -38,48 +36,50 @@ def out_write(name: str, payload: dict):
                                                  default=str))
 
 
+def _system_cfg(dedup: bool, wave: int) -> SystemCfg:
+    # flat (exact) index regardless of store size: the tables report exact
+    # hit rates, so the tier choice must not inject IVF approximation
+    return SystemCfg(index="flat", cache_index=False,
+                     gen=GenCfg(dedup=dedup),
+                     precompute=PrecomputeCfg(wave=wave))
+
+
 def build_setup(dataset: str, dedup: bool, n_store: int = None, seed=0,
                 wave: int = 32):
-    """Returns dict(kb, emb, store, index, queries, responses, gen_stats).
+    """Returns dict(kb, emb, store, index, user, gen_stats, system).
 
-    Stores are built through the batched precompute pipeline (wave is part
-    of the cache key; dedup decisions are made on store-dtype-rounded
-    similarities, see core/precompute.py) — that is what makes
-    REPRO_BENCH_SCALE ~19, the paper's 150K-pair operating point,
-    reachable on a CPU box.
+    Stores are built through ``StorInfer.build`` (the batched precompute
+    pipeline underneath; wave is part of the cache key, and dedup
+    decisions are made on store-dtype-rounded similarities, see
+    core/precompute.py) — that is what makes REPRO_BENCH_SCALE ~19, the
+    paper's 150K-pair operating point, reachable on a CPU box.
     """
     n_store = n_store or N_STORE
     key = (f"{dataset}_{'dedup' if dedup else 'random'}_{n_store}_{seed}"
            f"_w{wave}")
     cache_dir = CACHE / key
-    emb = HashEmbedder()
     kb = build_kb(dataset, seed=seed)
-    # gen_stats.json is written only on completion; the pipeline now
+    cfg = _system_cfg(dedup, wave)
+    # gen_stats.json is written only on completion; the pipeline
     # checkpoints manifest.json mid-build, so manifest-exists alone would
     # mistake an interrupted build for a finished cache
     if (cache_dir / "gen_stats.json").exists():
-        store = PrecomputedStore.open_(cache_dir)
+        system = StorInfer.open(cache_dir, cfg)
         stats = json.loads((cache_dir / "gen_stats.json").read_text())
     else:
-        tok = Tokenizer.from_texts([d.text() for d in kb.docs])
-        chunks = [chunk_key(d.doc_id, d.text()) for d in kb.docs]
-        pipe = PrecomputePipeline(SyntheticOracleLM(kb), emb, tok,
-                                  GenCfg(dedup=dedup),
-                                  PrecomputeCfg(wave=wave))
-        store = PrecomputedStore(cache_dir, dim=emb.dim)
-        t0 = time.perf_counter()
-        qs, rs, es, st = pipe.run(chunks, n_store, store=store,
-                                  seed=seed + 11)
+        system = StorInfer.build(kb, cfg, cache_dir, n_pairs=n_store,
+                                 seed=seed + 11)
+        st = system.build_stats
         stats = {"generated": st.generated, "discarded": st.discarded,
                  "seconds": st.seconds,
                  "max_wave_seconds": st.max_wave_seconds,
                  "sec_per_pair": st.seconds / max(st.generated, 1),
                  "temp_final": st.temp_final}
         (cache_dir / "gen_stats.json").write_text(json.dumps(stats))
-    index = FlatIndex(store.embeddings())
     user = sample_user_queries(kb, N_USER, seed=seed + 77)
-    return {"kb": kb, "emb": emb, "store": store, "index": index,
-            "user": user, "gen_stats": stats}
+    return {"kb": kb, "emb": system.embedder, "store": system.store,
+            "index": system.index, "user": user, "gen_stats": stats,
+            "system": system}
 
 
 def hit_stats(setup, s_th_run: float, n_prefix: int = None):
@@ -87,7 +87,7 @@ def hit_stats(setup, s_th_run: float, n_prefix: int = None):
     search_seconds_per_query)."""
     emb, index, store = setup["emb"], setup["index"], setup["store"]
     if n_prefix is not None:
-        index = FlatIndex(store.embeddings()[:n_prefix])
+        index = make_index("flat", store.embeddings()[:n_prefix])
     ue = emb.encode([q for q, _ in setup["user"]])
     t0 = time.perf_counter()
     v, i = index.search(ue, 1)

@@ -16,7 +16,7 @@ import numpy as np
 
 from benchmarks.common import DATASETS, out_write
 from repro.core import latency as L
-from repro.core.index import FlatIndex
+from repro.api import make_index
 from repro.core.kb import PROFILES
 
 N_PARAMS_8B = 8.0e9
@@ -29,7 +29,7 @@ def measured_search_latency(n=150_000, d=384, q=1, repeat=10):
     rng = np.random.default_rng(0)
     x = rng.normal(size=(n, d)).astype(np.float32)
     x /= np.linalg.norm(x, axis=1, keepdims=True)
-    idx = FlatIndex(x)
+    idx = make_index("flat", x)
     qs = x[:q] + 0.01
     idx.search(qs, 10)  # warmup/compile
     ts = []

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 
 from benchmarks.common import build_setup, out_write
 from repro.configs import get_config, reduced
-from repro.core.embedder import HashEmbedder
+from repro.api import make_embedder
 from repro.core.generator import GenCfg, QueryGenerator, chunk_key
 from repro.core.kb import build_kb
 from repro.core.tokenizer import Tokenizer
@@ -36,8 +36,8 @@ def main():
     eng = Engine(cfg, params, tok, M.RunCfg(attn_impl="naive", remat=False),
                  max_len=160, chunk=8)
     lm = TinyJaxLM(eng)
-    gen = QueryGenerator(lm, HashEmbedder(), tok, GenCfg(dedup=True,
-                                                         s_th_gen=0.995))
+    gen = QueryGenerator(lm, make_embedder("hash"), tok,
+                         GenCfg(dedup=True, s_th_gen=0.995))
     chunks = [chunk_key(d.doc_id, d.text()) for d in kb.docs]
     t0 = time.perf_counter()
     qs, rs, _, jst = gen.generate(chunks, 6, seed=0)

@@ -1,5 +1,10 @@
-"""Quickstart: build a precomputed-query store from a knowledge base and
-serve queries through the StorInfer runtime.
+"""Quickstart: the whole StorInfer system through its one front door —
+build a precomputed-query store from a knowledge base, then serve queries
+against it, in five lines of API:
+
+    kb = build_kb("squad", n_docs=25)
+    with StorInfer.build(kb, SystemCfg(), path, n_pairs=1500) as si:
+        result = si.query("what is the height of aurora bridge?")
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -8,51 +13,36 @@ import tempfile
 
 sys.path.insert(0, "src")
 
-import numpy as np
-
-from repro.core.embedder import HashEmbedder
-from repro.core.generator import GenCfg, SyntheticOracleLM, chunk_key
-from repro.core.index import FlatIndex
+from repro import StorInfer, SystemCfg
 from repro.core.kb import build_kb, sample_user_queries
-from repro.core.precompute import PrecomputeCfg, PrecomputePipeline
-from repro.core.runtime import RuntimeCfg, StorInferRuntime
-from repro.core.store import PrecomputedStore
-from repro.core.tokenizer import Tokenizer
 
 
 def main():
-    # 1. a knowledge base (stands in for the paper's SQuAD documents)
+    # a knowledge base (stands in for the paper's SQuAD documents)
     kb = build_kb("squad", n_docs=25)
-    chunks = [chunk_key(d.doc_id, d.text()) for d in kb.docs]
-    emb = HashEmbedder()
-    tok = Tokenizer.from_texts([d.text() for d in kb.docs])
 
-    # 2. OFFLINE: batched deduplicated query generation into the store
-    #    (checkpointed — a killed build resumes from the manifest)
     with tempfile.TemporaryDirectory() as td:
-        store = PrecomputedStore(td, dim=emb.dim)
-        pipe = PrecomputePipeline(SyntheticOracleLM(kb), emb, tok,
-                                  GenCfg(dedup=True), PrecomputeCfg(wave=32))
-        qs, rs, es, stats = pipe.run(chunks, 1500, store=store, seed=0)
-        print(f"generated {stats.generated} pairs in {stats.waves} waves "
-              f"({stats.discarded} near-duplicates discarded, "
-              f"{stats.seconds:.1f}s, {stats.pairs_per_sec:.0f} pairs/s); "
-              f"store = "
-              f"{store.storage_bytes()['total_bytes'] / 1e6:.2f} MB")
+        # OFFLINE: batched deduplicated query generation into the store
+        # (checkpointed — rerunning after a kill resumes from the manifest)
+        with StorInfer.build(kb, SystemCfg(), td, n_pairs=1500) as si:
+            st = si.build_stats
+            print(f"generated {st.generated} pairs in {st.waves} waves "
+                  f"({st.discarded} near-duplicates discarded, "
+                  f"{st.seconds:.1f}s, {st.pairs_per_sec:.0f} pairs/s); "
+                  f"store = "
+                  f"{si.store.storage_bytes()['total_bytes'] / 1e6:.2f} MB")
 
-        # 3. ONLINE: queries hit the store or fall through
-        rt = StorInferRuntime(FlatIndex(store.embeddings()), store, emb,
-                              engine=None, cfg=RuntimeCfg(s_th_run=0.9))
-        user = sample_user_queries(kb, 400, seed=5)
-        hits = 0
-        for q, fact in user[:400]:
-            r = rt.query(q)
-            hits += r.hit
-        print(f"hit rate @0.9 over {len(user)} user queries: "
-              f"{hits / len(user):.3f}")
-        r = rt.query(user[0][0])
-        print(f"example: {user[0][0]!r}\n  -> [{r.source}] {r.response!r} "
-              f"(search {r.search_s * 1e3:.2f} ms)")
+            # ONLINE: queries hit the store or fall through
+            user = sample_user_queries(kb, 400, seed=5)
+            hits = sum(si.query(q).hit for q, _ in user)
+            print(f"hit rate @0.9 over {len(user)} user queries: "
+                  f"{hits / len(user):.3f}")
+            r = si.query(user[0][0])
+            print(f"example: {user[0][0]!r}\n  -> [{r.source}] "
+                  f"{r.response!r} (search {r.search_s * 1e3:.2f} ms)")
+            s = si.stats()
+            print(f"system: {s.store_rows} rows behind a {s.index_tier} "
+                  f"index, {s.runtime.queries} queries served")
 
 
 if __name__ == "__main__":

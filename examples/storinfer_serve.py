@@ -2,7 +2,9 @@
 parallel vector search and chunked-decode hit-cancellation (Fig 2), the
 continuous-batching scheduler path, and the batched serving runtime
 (microbatched admission -> one embed + one MIPS search + one batched
-decode, hit slots cancelled mid-flight).
+decode, hit slots cancelled mid-flight). The whole system is assembled
+declaratively through the ``StorInfer`` facade — one ``SystemCfg`` names
+the embedder, the index tier, the runtime thresholds, and the engine arch.
 
   PYTHONPATH=src python examples/storinfer_serve.py
 """
@@ -11,57 +13,38 @@ import tempfile
 
 sys.path.insert(0, "src")
 
-import dataclasses
-
-import jax
-import jax.numpy as jnp
-
-from repro.configs import get_config, reduced
-from repro.core.embedder import HashEmbedder
-from repro.core.generator import (GenCfg, QueryGenerator, SyntheticOracleLM,
-                                  chunk_key)
-from repro.core.index import FlatIndex
+from repro import EngineCfg, StorInfer, SystemCfg
 from repro.core.kb import build_kb, sample_user_queries
-from repro.core.runtime import (BatchedRuntime, BatchedRuntimeCfg,
-                                RuntimeCfg, StorInferRuntime)
-from repro.core.store import PrecomputedStore
+from repro.core.runtime import BatchedRuntimeCfg
 from repro.core.tokenizer import Tokenizer
-from repro.models import model as M
-from repro.serving.engine import BatchScheduler, Engine, Request
+from repro.serving.engine import BatchScheduler, Request
 
 
 def main():
     kb = build_kb("squad", n_docs=10)
     tok = Tokenizer.from_texts([d.text() for d in kb.docs], max_vocab=1024)
-    emb = HashEmbedder()
 
-    # the on-device fallback LM (tiny config; swap real weights here)
-    cfg = dataclasses.replace(reduced(get_config("llama3.2-3b")),
-                              vocab_size=tok.vocab_size, n_layers=2)
-    params = M.init_model(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
-    engine = Engine(cfg, params, tok,
-                    M.RunCfg(attn_impl="naive", remat=False),
-                    max_len=128, chunk=4)
+    # one declarative config: tiny fallback LM (swap real weights via
+    # smoke=False), batched admission window, runtime threshold
+    cfg = SystemCfg(
+        s_th_run=0.9,
+        batched=BatchedRuntimeCfg(max_batch=8, max_wait_s=0.02),
+        engine=EngineCfg(arch="llama3.2-3b", smoke=True, max_len=128,
+                         chunk=4))
 
-    with tempfile.TemporaryDirectory() as td:
-        store = PrecomputedStore(td, dim=emb.dim)
-        gen = QueryGenerator(SyntheticOracleLM(kb), emb, tok,
-                             GenCfg(dedup=True))
-        chunks = [chunk_key(d.doc_id, d.text()) for d in kb.docs]
-        gen.generate(chunks, 600, store=store, seed=0)
-        store.flush()
-
-        rt = StorInferRuntime(FlatIndex(store.embeddings()), store, emb,
-                              engine=engine, cfg=RuntimeCfg(s_th_run=0.9))
+    with tempfile.TemporaryDirectory() as td, \
+            StorInfer.build(kb, cfg, td, n_pairs=600,
+                            tokenizer=tok) as si:
         user = sample_user_queries(kb, 6, seed=3)
+
         print("=== parallel search + cancellable decode (Fig 2) ===")
         for q, _ in user:
-            r = rt.query(q, max_new=16)
+            r = si.query(q, max_new=16)
             print(f"[{r.source:5s} hit={r.hit} chunks={r.chunks_run} "
                   f"lat={r.latency_s:.3f}s] {q!r}")
 
         print("=== continuous batching with per-slot cancellation ===")
-        sched = BatchScheduler(engine, batch_size=2)
+        sched = BatchScheduler(si.engine, batch_size=2)
         for i, (q, _) in enumerate(user[:4]):
             sched.submit(Request(rid=i, prompt=q, max_new=8))
         # a StorInfer hit arrives for request 1 -> cancel mid-flight
@@ -71,20 +54,17 @@ def main():
             print(f"req {r.rid}: cancelled={r.cancelled} "
                   f"tokens={len(r.out_ids)}")
 
-        print("=== batched StorInfer runtime (auto-tiered index) ===")
-        with BatchedRuntime.from_store(
-                store, emb, engine=engine,
-                cfg=BatchedRuntimeCfg(s_th_run=0.9, max_batch=8,
-                                      max_wait_s=0.02)) as brt:
-            futs = [brt.submit(q, max_new=8) for q, _ in user]
+        print("=== batched StorInfer serving (auto-tiered index) ===")
+        with si.serve():
+            futs = [si.submit(q, max_new=8) for q, _ in user]
             for (q, _), f in zip(user, futs):
                 r = f.result(timeout=120)
                 print(f"[{r.source:5s} hit={r.hit} "
                       f"cancelled={r.cancelled}] {q!r}")
-            s = brt.stats
-            print(f"stats: {s.queries} queries, {s.hits} hits "
-                  f"({s.hit_rate:.0%}), {s.llm_cancelled} decodes "
-                  f"hit-cancelled, {s.batches} microbatches")
+        s = si.stats().runtime
+        print(f"stats: {s.queries} queries, {s.hits} hits "
+              f"({s.hit_rate:.0%}), {s.llm_cancelled} decodes "
+              f"hit-cancelled, {s.batches} microbatches")
 
 
 if __name__ == "__main__":

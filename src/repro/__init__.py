@@ -1,0 +1,38 @@
+"""StorInfer reproduction: precomputed query storage for LLM inference.
+
+Public API — one front door for the whole system:
+
+    from repro import StorInfer, SystemCfg
+
+    kb = build_kb("squad", n_docs=25)
+    with StorInfer.build(kb, SystemCfg(), "runs/demo", n_pairs=1500) as si:
+        print(si.query("what is the height of aurora bridge?"))
+
+Everything below is re-exported lazily from ``repro.api`` (so importing
+a leaf module like ``repro.core.tokenizer`` never pays the JAX import).
+The underlying subsystems stay importable at their original paths
+(``repro.core.*``, ``repro.serving.*``, ...) — the facade composes them,
+it does not hide them.
+"""
+from __future__ import annotations
+
+_API_EXPORTS = (
+    "StorInfer", "SystemCfg", "EngineCfg", "SystemStats",
+    "QueryResult", "RuntimeStats",
+    "EmbedderProtocol", "IndexProtocol", "IndexCaps", "index_caps",
+    "register_embedder", "register_index",
+    "make_embedder", "make_index", "make_pipeline", "tier_of",
+)
+
+__all__ = list(_API_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _API_EXPORTS:
+        from repro import api
+        return getattr(api, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_API_EXPORTS))

@@ -102,7 +102,8 @@ class StorInferRuntime:
                 llm_s=(session.decode_s + session.prefill_s) if session
                 else 0.0,
                 latency_s=time.perf_counter() - t0,
-                chunks_run=session.chunks_run if session else 0)
+                chunks_run=session.chunks_run if session else 0,
+                cancelled=bool(session is not None and session.cancelled))
 
         # miss: let the LLM finish (it kept decoding the whole time)
         llm_text = ""
@@ -126,6 +127,16 @@ class StorInferRuntime:
         e = self.embedder.encode(list(texts))
         v, i = self.index.search(e, k)
         return v, i, time.perf_counter() - t0
+
+    def close(self):
+        self._pool.shutdown(wait=False)
+
+    def __enter__(self) -> "StorInferRuntime":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
 
 
 # ---------------------------------------------------------------------------
@@ -171,7 +182,11 @@ class BatchedRuntime:
 
     def __init__(self, index, store, embedder, engine=None,
                  cfg: BatchedRuntimeCfg = None, mesh=None,
-                 auto_index_kw: Optional[dict] = None):
+                 auto_index_kw: Optional[dict] = None, rebuild=None):
+        """``rebuild``: optional ``(store, mesh) -> index`` callable used
+        by ``flush_and_rebuild`` instead of ``auto_index`` — callers that
+        pinned a specific tier (the facade's declarative cfg) use it to
+        keep write-back rebuilds on that tier."""
         self.index = index
         self.store = store
         self.embedder = embedder
@@ -179,6 +194,7 @@ class BatchedRuntime:
         self.cfg = cfg or BatchedRuntimeCfg()
         self.mesh = mesh
         self._auto_index_kw = dict(auto_index_kw or {})
+        self._rebuild = rebuild
         self.stats = RuntimeStats()
         self._pool = ThreadPoolExecutor(max_workers=2)
         self._batcher = None
@@ -291,12 +307,17 @@ class BatchedRuntime:
 
     def flush_and_rebuild(self):
         """Persist pending write-backs and rebuild the index over the grown
-        store — ``auto_index`` re-picks the tier, so a store that outgrew
-        the flat boundary comes back as IVF (or Sharded on a mesh)."""
-        from repro.core.index import auto_index
+        store. With the default ``auto_index`` path the tier is re-picked,
+        so a store that outgrew the flat boundary comes back as IVF (or
+        Sharded on a mesh); a ``rebuild`` callable pins the caller's
+        choice instead."""
         self.store.flush()
-        self.index = auto_index(self.store, self.mesh,
-                                **self._auto_index_kw)
+        if self._rebuild is not None:
+            self.index = self._rebuild(self.store, self.mesh)
+        else:
+            from repro.core.index import auto_index
+            self.index = auto_index(self.store, self.mesh,
+                                    **self._auto_index_kw)
         self.stats.index_rebuilds += 1
         self._pending_writebacks = 0
 
@@ -322,10 +343,17 @@ class BatchedRuntime:
         microbatch is processed."""
         return self.serve().submit(text, max_new=max_new)
 
+    def stop_serving(self, drain: bool = True):
+        """Stop the admission queue (if running) without tearing down the
+        runtime — synchronous ``query_batch`` keeps working and ``serve``
+        can start a fresh batcher later."""
+        with self._batcher_lock:
+            if self._batcher is not None:
+                self._batcher.stop(drain=drain)
+                self._batcher = None
+
     def close(self):
-        if self._batcher is not None:
-            self._batcher.stop()
-            self._batcher = None
+        self.stop_serving()
         self._pool.shutdown(wait=False)
 
     def __enter__(self) -> "BatchedRuntime":

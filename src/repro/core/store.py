@@ -135,6 +135,14 @@ class PrecomputedStore:
             self.flush()
             self._text_f.close()
 
+    def abort(self):
+        """Release the text handle WITHOUT committing pending state —
+        crash semantics for a failed build: the store on disk stays at
+        its last flushed checkpoint, and a later ``open_`` truncates any
+        uncommitted tail exactly as it would after a real kill."""
+        if self._text_f is not None and not self._text_f.closed:
+            self._text_f.close()
+
     @property
     def closed(self) -> bool:
         return self._text_f is None or self._text_f.closed

@@ -4,24 +4,22 @@
       --dataset squad --n-pairs 150000 --wave 32 --store runs/squad150k
 
 Builds (or resumes — the default when the store directory already holds a
-checkpointed build) a deduplicated precomputed-query store via the batched
-``PrecomputePipeline``, then fits and persists the serving index into the
-store root so ``BatchedRuntime.from_store(..., cache_dir="store")`` reopens
-it without re-running k-means. Kill it any time: rerunning the same command
-continues from the last checkpoint and produces a store byte-identical to
-an uninterrupted run.
+checkpointed build) a deduplicated precomputed-query store via
+``StorInfer.build`` (the batched ``PrecomputePipeline`` underneath), then
+fits and persists the serving index into the store root so
+``StorInfer.open`` / ``BatchedRuntime.from_store(..., cache_dir="store")``
+reopen it without re-running k-means. Kill it any time: rerunning the same
+command continues from the last checkpoint and produces a store
+byte-identical to an uninterrupted run.
 """
 import argparse
+import json
 import time
+from pathlib import Path
 
-from repro.core.embedder import HashEmbedder, MiniLMEncoder
-from repro.core.generator import GenCfg, SyntheticOracleLM, chunk_key
-from repro.core.index import auto_index, select_tier
+from repro.api import StorInfer, SystemCfg, tier_of
 from repro.core.kb import build_kb
-from repro.core.precompute import (PrecomputeCfg, PrecomputePipeline,
-                                   STATE_KEY)
-from repro.core.store import PrecomputedStore
-from repro.core.tokenizer import Tokenizer
+from repro.core.precompute import STATE_KEY, PrecomputeCfg
 
 
 def main(argv=None):
@@ -38,6 +36,8 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--checkpoint-every", type=int, default=64,
                     help="waves between resume checkpoints")
+    # audited for the serve.py store_true/default=True trap: these three
+    # default to False, so plain store_true keeps both states reachable
     ap.add_argument("--background-recluster", action="store_true",
                     help="refit the dedup IVF in a thread (faster, gives "
                          "up kill/resume determinism)")
@@ -50,24 +50,21 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     kb = build_kb(args.dataset, seed=args.seed, n_docs=args.n_docs)
-    tok = Tokenizer.from_texts([d.text() for d in kb.docs])
-    emb = HashEmbedder() if args.embedder == "hash" else MiniLMEncoder(tok)
-    chunks = [chunk_key(d.doc_id, d.text()) for d in kb.docs]
+    cfg = SystemCfg(
+        embedder=args.embedder,
+        index="none" if args.no_index else "auto",
+        precompute=PrecomputeCfg(
+            wave=args.wave, checkpoint_every=args.checkpoint_every,
+            background_recluster=args.background_recluster))
 
-    try:
-        store = PrecomputedStore.open_(args.store)
-        done = store.manifest_extra.get(STATE_KEY, {}).get("generated", "?")
-        print(f"resuming store {args.store}: {store.count} rows "
+    manifest = Path(args.store) / "manifest.json"
+    if manifest.exists():
+        man = json.loads(manifest.read_text())
+        done = man.get("extra", {}).get(STATE_KEY, {}).get("generated", "?")
+        print(f"resuming store {args.store}: {man.get('count', '?')} rows "
               f"(checkpoint says {done})")
-    except FileNotFoundError:
-        store = PrecomputedStore(args.store, dim=emb.dim)
+    else:
         print(f"fresh store {args.store}")
-
-    pipe = PrecomputePipeline(
-        SyntheticOracleLM(kb), emb, tok, GenCfg(dedup=True),
-        PrecomputeCfg(wave=args.wave,
-                      checkpoint_every=args.checkpoint_every,
-                      background_recluster=args.background_recluster))
 
     t0 = time.perf_counter()
     last = [t0]
@@ -80,30 +77,30 @@ def main(argv=None):
                   f"({discarded} discarded, dedup={mode}, "
                   f"{rate:.0f} pairs/s this run)")
 
-    _, _, _, stats = pipe.run(chunks, args.n_pairs, store=store,
-                              seed=args.seed, resume=not args.fresh,
-                              on_wave=on_wave)
-    sb = store.storage_bytes()
-    print(f"build done: {store.count} rows "
-          f"({stats.generated} this run, {stats.discarded} discarded, "
-          f"{stats.pairs_per_sec:.0f} pairs/s, "
-          f"dedup index ended {stats.index_mode}); "
-          f"store {sb['total_bytes'] / 1e6:.1f} MB "
-          f"({sb['index_bytes'] / 1e6:.1f} embeddings + "
-          f"{sb['metadata_bytes'] / 1e6:.1f} metadata)")
+    si = StorInfer.build(kb, cfg, args.store, n_pairs=args.n_pairs,
+                         seed=args.seed, resume=not args.fresh,
+                         on_wave=on_wave)
+    with si:
+        stats = si.build_stats
+        sb = si.store.storage_bytes()
+        print(f"build done: {si.store.count} rows "
+              f"({stats.generated} this run, {stats.discarded} discarded, "
+              f"{stats.pairs_per_sec:.0f} pairs/s, "
+              f"dedup index ended {stats.index_mode}); "
+              f"store {sb['total_bytes'] / 1e6:.1f} MB "
+              f"({sb['index_bytes'] / 1e6:.1f} embeddings + "
+              f"{sb['metadata_bytes'] / 1e6:.1f} metadata)")
 
-    if not args.no_index:
-        tier = select_tier(store.count)
-        t1 = time.perf_counter()
-        idx = auto_index(store, cache_dir=store.root)
-        how = "loaded" if getattr(idx, "loaded_from", None) else "built"
-        print(f"serving index: {tier} {how} in "
-              f"{time.perf_counter() - t1:.1f}s "
-              f"(cache: {store.root}/index_ivf.npz)"
-              if tier == "ivf" else
-              f"serving index: {tier} ({time.perf_counter() - t1:.1f}s; "
-              "nothing to cache below the IVF boundary)")
-    store.close()
+        if si.index is not None:
+            tier = tier_of(si.index)
+            how = "loaded" if getattr(si.index, "loaded_from", None) \
+                else "built"
+            dt = si.index_seconds
+            print(f"serving index: {tier} {how} in {dt:.1f}s "
+                  f"(cache: {si.store.root}/index_ivf.npz)"
+                  if tier == "ivf" else
+                  f"serving index: {tier} ({dt:.1f}s; nothing to cache "
+                  "below the IVF boundary)")
 
 
 if __name__ == "__main__":

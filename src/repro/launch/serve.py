@@ -1,38 +1,33 @@
-"""Serving launcher: StorInfer runtime in front of any assigned arch.
+"""Serving launcher: the StorInfer facade in front of any assigned arch.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b \
       --n-pairs 800 --n-queries 40
 
-Builds (or loads) a precomputed store from a KB, stands up the fallback
-engine for the chosen arch, and serves a query stream through the parallel
-search + cancellable-decode runtime, reporting hit rate and effective
-latency. On real hardware drop --smoke to load the full config.
+Opens (or builds, via the resumable batched pipeline) a precomputed store,
+stands up the fallback engine for the chosen arch, and serves a query
+stream through the parallel search + cancellable-decode runtime, reporting
+hit rate and effective latency. On real hardware pass --no-smoke to load
+the full arch config instead of the reduced smoke one.
 """
 import argparse
-import dataclasses
-import time
+import tempfile
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config, reduced
-from repro.core.embedder import HashEmbedder
-from repro.core.generator import (GenCfg, QueryGenerator, SyntheticOracleLM,
-                                  chunk_key)
-from repro.core.index import FlatIndex, IVFIndex, auto_index
+from repro.api import EngineCfg, StorInfer, SystemCfg
 from repro.core.kb import build_kb, sample_user_queries
-from repro.core.runtime import RuntimeCfg, StorInferRuntime
-from repro.core.store import PrecomputedStore
 from repro.core.tokenizer import Tokenizer
-from repro.models import model as M
-from repro.serving.engine import Engine
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-1.7b")
-    ap.add_argument("--smoke", action="store_true", default=True)
+    # BooleanOptionalAction: plain store_true with default=True made the
+    # full-config mode unreachable (--smoke could never be turned off)
+    ap.add_argument("--smoke", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="reduced arch config (--no-smoke loads the full "
+                         "one)")
     ap.add_argument("--dataset", default="squad")
     ap.add_argument("--n-pairs", type=int, default=800)
     ap.add_argument("--n-queries", type=int, default=40)
@@ -47,49 +42,31 @@ def main():
 
     kb = build_kb(args.dataset, n_docs=20)
     tok = Tokenizer.from_texts([d.text() for d in kb.docs], max_vocab=2048)
-    emb = HashEmbedder()
+    cfg = SystemCfg(index=args.index, s_th_run=args.s_th_run,
+                    engine=EngineCfg(arch=args.arch, smoke=args.smoke,
+                                     max_len=160, chunk=8))
 
-    cfg = get_config(args.arch)
-    if args.smoke:
-        cfg = dataclasses.replace(reduced(cfg), vocab_size=tok.vocab_size,
-                                  n_layers=2)
-    params = M.init_model(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
-    engine = Engine(cfg, params, tok,
-                    M.RunCfg(attn_impl="naive", remat=False),
-                    max_len=160, chunk=8)
-
-    import tempfile
     store_dir = args.store or tempfile.mkdtemp(prefix="storinfer_")
     try:
-        store = PrecomputedStore.open_(store_dir)
-        print(f"loaded store: {store.count} pairs")
+        si = StorInfer.open(store_dir, cfg, tokenizer=tok)
+        print(f"loaded store: {si.store.count} pairs")
     except FileNotFoundError:
-        store = PrecomputedStore(store_dir, dim=emb.dim)
-        gen = QueryGenerator(SyntheticOracleLM(kb), emb, tok,
-                             GenCfg(dedup=True))
-        chunks = [chunk_key(d.doc_id, d.text()) for d in kb.docs]
-        _, _, _, st = gen.generate(chunks, args.n_pairs, store=store)
-        store.flush()
-        print(f"built store: {store.count} pairs "
+        si = StorInfer.build(kb, cfg, store_dir, n_pairs=args.n_pairs,
+                             tokenizer=tok)
+        st = si.build_stats
+        print(f"built store: {si.store.count} pairs "
               f"({st.discarded} discarded), "
-              f"{store.storage_bytes()['total_bytes'] / 1e6:.2f} MB")
+              f"{si.store.storage_bytes()['total_bytes'] / 1e6:.2f} MB")
 
-    if args.index == "auto":
-        index = auto_index(store, cache_dir=store.root)
-    else:
-        embs = store.embeddings()
-        index = FlatIndex(embs) if args.index == "flat" else IVFIndex(embs)
-    rt = StorInferRuntime(index, store, emb, engine=engine,
-                          cfg=RuntimeCfg(s_th_run=args.s_th_run))
-
-    user = sample_user_queries(kb, args.n_queries, seed=9)
-    hits, lat = 0, []
-    for q, _ in user:
-        r = rt.query(q, max_new=16)
-        hits += r.hit
-        lat.append(r.latency_s)
-    print(f"hit_rate={hits / len(user):.3f} "
-          f"mean_latency={np.mean(lat):.3f}s p50={np.median(lat):.3f}s")
+    with si:
+        user = sample_user_queries(kb, args.n_queries, seed=9)
+        hits, lat = 0, []
+        for q, _ in user:
+            r = si.query(q, max_new=16)
+            hits += r.hit
+            lat.append(r.latency_s)
+        print(f"hit_rate={hits / len(user):.3f} "
+              f"mean_latency={np.mean(lat):.3f}s p50={np.median(lat):.3f}s")
 
 
 if __name__ == "__main__":

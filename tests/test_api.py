@@ -1,0 +1,247 @@
+"""The public API facade: StorInfer build -> open -> query -> query_batch
+-> serve round-trips on both flat and IVF tiers, component protocols and
+registries, the crash-then-resume build path, and the exported surface of
+``repro`` itself (accidental breakage of the public API must fail CI)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import repro
+from repro.api import (EngineCfg, EmbedderProtocol, IndexProtocol,
+                       StorInfer, SystemCfg, index_caps, make_embedder,
+                       make_index, make_pipeline, tier_of)
+from repro.core.embedder import HashEmbedder
+from repro.core.generator import SyntheticOracleLM
+from repro.core.index import FlatIndex, IVFIndex, IncrementalIndex
+from repro.core.kb import build_kb, sample_user_queries
+from repro.core.precompute import BuildKilled, PrecomputeCfg
+from repro.core.runtime import QueryResult, RuntimeStats
+from repro.core.store import PrecomputedStore
+
+
+@pytest.fixture(scope="module")
+def kb():
+    return build_kb("squad", n_docs=8)
+
+
+# ---------------------------------------------------------------------------
+# public surface
+# ---------------------------------------------------------------------------
+
+
+PUBLIC_SURFACE = {
+    "StorInfer", "SystemCfg", "EngineCfg", "SystemStats",
+    "QueryResult", "RuntimeStats",
+    "EmbedderProtocol", "IndexProtocol", "IndexCaps", "index_caps",
+    "register_embedder", "register_index",
+    "make_embedder", "make_index", "make_pipeline", "tier_of",
+}
+
+
+def test_repro_exports_public_surface():
+    """`from repro import X` works for every name in the public API, and
+    __all__ advertises exactly that surface."""
+    assert set(repro.__all__) == PUBLIC_SURFACE
+    for name in PUBLIC_SURFACE:
+        assert getattr(repro, name) is not None
+    assert repro.StorInfer is StorInfer
+    assert repro.QueryResult is QueryResult
+    with pytest.raises(AttributeError):
+        repro.does_not_exist
+    assert PUBLIC_SURFACE <= set(dir(repro))
+
+
+def test_package_and_api_all_stay_in_sync():
+    """The lazy re-export list in repro/__init__ must track api.__all__ —
+    a name added to one but not the other is silent surface drift."""
+    from repro import api
+    assert set(repro.__all__) == set(api.__all__)
+
+
+def test_result_types_are_the_runtime_ones():
+    """One typed result surface: the facade re-exports the same
+    QueryResult/RuntimeStats the runtimes produce — not copies."""
+    from repro.core import runtime
+    assert repro.QueryResult is runtime.QueryResult
+    assert repro.RuntimeStats is runtime.RuntimeStats
+
+
+# ---------------------------------------------------------------------------
+# protocols + registries
+# ---------------------------------------------------------------------------
+
+
+def test_embedder_protocol_and_registry():
+    emb = make_embedder("hash", dim=64)
+    assert isinstance(emb, EmbedderProtocol) and emb.dim == 64
+    # instance passthrough is validated too
+    assert make_embedder(HashEmbedder()) is not None
+    with pytest.raises(TypeError):
+        make_embedder(object())
+    with pytest.raises(KeyError):
+        make_embedder("nope")
+    with pytest.raises(ValueError):
+        make_embedder("minilm")          # needs tokenizer=
+
+
+def test_index_protocol_registry_and_caps():
+    x = np.random.default_rng(0).normal(size=(64, 16)).astype(np.float32)
+    flat = make_index("flat", x)
+    ivf = make_index("ivf", x, n_lists=4, nprobe=2)
+    assert isinstance(flat, FlatIndex) and isinstance(ivf, IVFIndex)
+    for idx in (flat, ivf):
+        assert isinstance(idx, IndexProtocol) and len(idx) == 64
+        v, i = idx.search(x[:3], 2)
+        assert v.shape == (3, 2) and i.shape == (3, 2)
+    assert make_index("none", x) is None
+    with pytest.raises(KeyError):
+        make_index("nope", x)
+    with pytest.raises(ValueError):
+        make_index("sharded", x)         # needs mesh=
+    # capability flags distinguish the tiers behind the shared contract
+    assert index_caps(ivf) == repro.IndexCaps(save=True, load=True,
+                                              add=False)
+    assert index_caps(flat) == repro.IndexCaps(save=False, load=False,
+                                               add=False)
+    assert index_caps(IncrementalIndex(16)).add
+    assert tier_of(flat) == "flat" and tier_of(ivf) == "ivf"
+    assert tier_of(None) == "none"
+
+
+def test_facade_rejects_protocol_violations(tmp_path, kb):
+    emb = HashEmbedder()
+    store = PrecomputedStore(tmp_path / "s", dim=emb.dim)
+    store.add_batch(emb.encode(["q"]), ["q"], ["r"])
+    store.flush()
+    with pytest.raises(TypeError):
+        StorInfer(store, object(), FlatIndex(store.embeddings()))
+    with pytest.raises(TypeError):
+        StorInfer(store, emb, object())
+
+
+# ---------------------------------------------------------------------------
+# build -> open -> query -> query_batch -> serve round-trips
+# ---------------------------------------------------------------------------
+
+
+def _roundtrip(si, kb, expect_tier):
+    assert tier_of(si.index) == expect_tier
+    q0, _ = si.store.get_pair(0)
+    r = si.query(q0)
+    assert isinstance(r, QueryResult)
+    assert r.hit and r.source == "store" and r.response
+    rs = si.query_batch([q0, "zebra xylophone never stored"])
+    assert rs[0].hit and not rs[1].hit
+    with si.serve():
+        futs = [si.submit(q) for q, _ in sample_user_queries(kb, 4,
+                                                             seed=3)]
+        futs.append(si.submit(q0))
+        assert futs[-1].result(timeout=60).hit
+        [f.result(timeout=60) for f in futs]
+    s = si.stats()
+    assert s.index_tier == expect_tier
+    assert s.store_rows == s.index_rows == si.store.count
+    assert s.runtime.queries == 1 + 2 + 5
+    assert s.runtime.hits + s.runtime.misses == s.runtime.queries
+    assert s.store_bytes["total_bytes"] > 0 and not s.has_engine
+
+
+def test_build_open_roundtrip_flat(tmp_path, kb):
+    cfg = SystemCfg()
+    with StorInfer.build(kb, cfg, tmp_path / "flat", n_pairs=120) as si:
+        assert si.build_stats.generated == 120
+        _roundtrip(si, kb, "flat")
+    # reopen serves the same store
+    with StorInfer.open(tmp_path / "flat", cfg) as si2:
+        assert si2.store.count == 120
+        _roundtrip(si2, kb, "flat")
+
+
+def test_build_open_roundtrip_ivf(tmp_path, kb):
+    cfg = SystemCfg(index_kw={"flat_max_rows": 64})
+    with StorInfer.build(kb, cfg, tmp_path / "ivf", n_pairs=160) as si:
+        _roundtrip(si, kb, "ivf")
+        # the k-means fit persisted into the store root...
+        assert (tmp_path / "ivf" / "index_ivf.npz").exists()
+    with StorInfer.open(tmp_path / "ivf", cfg) as si2:
+        # ...and reopening LOADED it instead of refitting
+        assert si2.index.loaded_from is not None
+        _roundtrip(si2, kb, "ivf")
+
+
+def test_build_kill_resume_and_store_only_mode(tmp_path, kb):
+    cfg = SystemCfg(index="none",
+                    precompute=PrecomputeCfg(wave=8, checkpoint_every=2))
+    with pytest.raises(BuildKilled):
+        StorInfer.build(kb, cfg, tmp_path / "s", n_pairs=96,
+                        _kill_after_waves=3)
+    # the aborted handle committed nothing past the last checkpoint;
+    # rerunning the same build resumes and completes
+    si = StorInfer.build(kb, cfg, tmp_path / "s", n_pairs=96)
+    assert 0 < si.build_stats.resumed_rows < 96
+    assert si.store.count == 96
+    # index="none" serves nothing — every query path refuses loudly
+    for call in (lambda: si.query("x"), lambda: si.query_batch(["x"]),
+                 lambda: si.submit("x")):
+        with pytest.raises(RuntimeError):
+            call()
+    assert si.stats().index_tier == "none"
+    si.close()
+
+
+def test_writeback_rebuild_honors_declared_tier(tmp_path, kb):
+    """§3.1 write-back rebuilds must rebuild the DECLARED tier with its
+    factory kwargs — not hand them to auto_index (which would reject
+    e.g. n_lists) or silently re-pick the tier."""
+    cfg = SystemCfg(index="ivf", index_kw={"n_lists": 8, "nprobe": 4})
+    with StorInfer.build(kb, cfg, tmp_path / "s", n_pairs=64) as si:
+        assert tier_of(si.index) == "ivf" and si.index.n_lists == 8
+        si._batched.flush_and_rebuild()
+        assert tier_of(si._batched.index) == "ivf"
+        assert si._batched.index.n_lists == 8
+        assert si._batched.stats.index_rebuilds == 1
+
+
+def test_build_from_raw_chunks_requires_lm(tmp_path, kb):
+    from repro.core.generator import chunk_key
+    chunks = [chunk_key(d.doc_id, d.text()) for d in kb.docs]
+    with pytest.raises(ValueError):
+        StorInfer.build(chunks, SystemCfg(), tmp_path / "s", n_pairs=10)
+    si = StorInfer.build(chunks, SystemCfg(), tmp_path / "s", n_pairs=10,
+                         lm=SyntheticOracleLM(kb))
+    assert si.store.count == 10
+    si.close()
+
+
+def test_facade_with_engine_decodes_misses(tmp_path, kb):
+    cfg = SystemCfg(engine=EngineCfg(arch="qwen3-1.7b", smoke=True,
+                                     max_len=64, chunk=4))
+    with StorInfer.build(kb, cfg, tmp_path / "s", n_pairs=40) as si:
+        assert si.engine is not None and si.stats().has_engine
+        r = si.query("completely unrelated zebra xylophone", max_new=4)
+        assert not r.hit and r.source == "llm" and r.response != ""
+        q0, _ = si.store.get_pair(0)
+        assert si.query(q0, max_new=4).hit
+
+
+def test_make_pipeline_store_free(kb):
+    from repro.core.tokenizer import Tokenizer
+    tok = Tokenizer.from_texts([d.text() for d in kb.docs])
+    pipe = make_pipeline(SystemCfg(precompute=PrecomputeCfg(wave=8)),
+                         SyntheticOracleLM(kb), tok)
+    from repro.core.generator import chunk_key
+    chunks = [chunk_key(d.doc_id, d.text()) for d in kb.docs]
+    qs, rs, es, stats = pipe.run(chunks, 24, seed=0)
+    assert len(qs) == len(rs) == es.shape[0] == 24
+    assert stats.generated == 24
+
+
+def test_s_th_run_convenience_overrides_both_paths():
+    cfg = SystemCfg(s_th_run=0.42)
+    assert cfg.runtime.s_th_run == 0.42
+    assert cfg.batched.s_th_run == 0.42
+    # explicit sub-configs win when the convenience knob is unset
+    cfg2 = SystemCfg(batched=dataclasses.replace(cfg.batched,
+                                                 s_th_run=0.7))
+    assert cfg2.batched.s_th_run == 0.7 and cfg2.runtime.s_th_run == 0.9

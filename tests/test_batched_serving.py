@@ -2,6 +2,7 @@
 cancellation accounting, MicroBatcher admission, engine batch sessions,
 auto_index tier selection, IVF recall measurement."""
 import dataclasses
+import threading
 import time
 
 import jax
@@ -183,6 +184,75 @@ def test_microbatcher_error_fails_batch_only():
         assert ok.result(timeout=10) == "fine"
     finally:
         mb.stop()
+
+
+def test_microbatcher_exception_errors_all_futures_in_batch():
+    """process_batch raising must FAIL every future in that batch — not
+    leave callers hanging on result() forever."""
+    def process(subs):
+        raise RuntimeError("boom")
+
+    mb = MicroBatcher(process, max_batch=8, max_wait_s=0.05).start()
+    try:
+        futs = [mb.submit(f"q{i}") for i in range(5)]
+        for f in futs:
+            with pytest.raises(RuntimeError, match="boom"):
+                f.result(timeout=10)       # resolves (with the error)
+    finally:
+        mb.stop()
+
+
+def test_microbatcher_wrong_result_count_errors_not_hangs():
+    mb = MicroBatcher(lambda subs: ["only one"], max_batch=4,
+                      max_wait_s=0.05).start()
+    try:
+        futs = [mb.submit(f"q{i}") for i in range(3)]
+        for f in futs:
+            with pytest.raises(RuntimeError, match="returned 1 results"):
+                f.result(timeout=10)
+    finally:
+        mb.stop()
+
+
+def test_microbatcher_submit_after_stop_raises():
+    mb = MicroBatcher(lambda subs: [s.text for s in subs]).start()
+    mb.stop()
+    with pytest.raises(RuntimeError, match="not running"):
+        mb.submit("too late")
+    # restartable: start() brings up a fresh worker
+    with mb:
+        assert mb.submit("again").result(timeout=10) == "again"
+    with pytest.raises(RuntimeError):
+        mb.submit("closed again")
+
+
+def test_microbatcher_drain_on_shutdown():
+    """stop(drain=True) processes everything already queued; with
+    drain=False the queued futures are cancelled instead."""
+    gate = threading.Event()
+
+    def process(subs):
+        gate.wait(timeout=10)
+        return [s.text for s in subs]
+
+    mb = MicroBatcher(process, max_batch=1, max_wait_s=0.0).start()
+    futs = [mb.submit(f"q{i}") for i in range(4)]
+    gate.set()
+    mb.stop(drain=True)
+    assert [f.result(timeout=10) for f in futs] == [f"q{i}"
+                                                    for i in range(4)]
+
+    gate.clear()
+    mb2 = MicroBatcher(process, max_batch=1, max_wait_s=0.0).start()
+    first = mb2.submit("in flight")        # worker blocks on the gate
+    time.sleep(0.05)
+    queued = [mb2.submit(f"w{i}") for i in range(3)]
+    # release the in-flight batch only after stop() has cancelled the
+    # queued ones (otherwise the worker could race in and process them)
+    threading.Timer(0.2, gate.set).start()
+    mb2.stop(drain=False)
+    assert first.result(timeout=10) == "in flight"
+    assert all(f.cancelled() for f in queued)
 
 
 def test_runtime_submit_end_to_end(stored):
