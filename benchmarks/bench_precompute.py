@@ -209,7 +209,7 @@ def main(argv=None):
 
     payload = {"speedup": speed, "scale": scale, "index_cache": cache,
                "resume": resume, "smoke": bool(args.smoke)}
-    out_write("BENCH_precompute", payload)
+    out_write("BENCH_precompute", payload, root_name="BENCH_precompute")
 
     ok = True
     if speed["speedup"] < 3.0:

@@ -25,15 +25,21 @@ N_STORE = int(8000 * SCALE)
 N_USER = int(2000 * SCALE)
 DATASETS = ("squad", "narrativeqa", "triviaqa")
 
-ROOT = Path(__file__).resolve().parents[1] / "experiments"
+REPO = Path(__file__).resolve().parents[1]
+ROOT = REPO / "experiments"
 CACHE = ROOT / "bench_cache"
 OUT = ROOT / "bench"
 
 
-def out_write(name: str, payload: dict):
+def out_write(name: str, payload: dict, root_name: str = None):
+    """Write the payload under experiments/bench/; ``root_name`` also drops
+    a copy at the repo root (the machine-readable perf-trajectory points —
+    BENCH_serve.json / BENCH_precompute.json — that CI uploads)."""
     OUT.mkdir(parents=True, exist_ok=True)
-    (OUT / f"{name}.json").write_text(json.dumps(payload, indent=1,
-                                                 default=str))
+    body = json.dumps(payload, indent=1, default=str)
+    (OUT / f"{name}.json").write_text(body)
+    if root_name:
+        (REPO / f"{root_name}.json").write_text(body)
 
 
 def _system_cfg(dedup: bool, wave: int) -> SystemCfg:

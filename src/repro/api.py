@@ -60,7 +60,8 @@ from repro.core.embedder import HashEmbedder
 from repro.core.generator import (GenCfg, QueryLM, SyntheticOracleLM,
                                   chunk_key)
 from repro.core.index import (FlatIndex, IVFIndex, IncrementalIndex,
-                              ShardedIndex, auto_index)
+                              ShardedIndex, auto_index, cached_device_store,
+                              device_store_for)
 from repro.core.precompute import (PrecomputeCfg, PrecomputePipeline,
                                    PrecomputeStats)
 from repro.core.runtime import (BatchedRuntime, BatchedRuntimeCfg,
@@ -207,14 +208,28 @@ def _sharded_factory(source, mesh=None, cache_dir=None, **kw):
     return ShardedIndex(np.asarray(_embs_of(source), np.float32), mesh, **kw)
 
 
+def _flat_factory(source, mesh=None, cache_dir=None, use_kernel=False,
+                  **kw):
+    # stores get the per-store DeviceStore cache, so §3.1 write-back
+    # rebuilds of a pinned "flat" tier append deltas instead of
+    # re-uploading the matrix (auto_index does the same for "auto")
+    if hasattr(source, "embeddings"):
+        dev = device_store_for(
+            source, layout="kernel" if use_kernel else "auto")
+        return FlatIndex(device=dev, use_kernel=use_kernel, **kw)
+    return FlatIndex(_embs_of(source), use_kernel=use_kernel, **kw)
+
+
 register_embedder("hash", lambda tokenizer=None, **kw: HashEmbedder(**kw))
 register_embedder("minilm", _minilm_factory)
 register_index("auto", lambda source, mesh=None, cache_dir=None, **kw:
                auto_index(source, mesh, cache_dir=cache_dir, **kw))
-register_index("flat", lambda source, mesh=None, cache_dir=None, **kw:
-               FlatIndex(_embs_of(source), **kw))
+register_index("flat", _flat_factory)
 register_index("ivf", lambda source, mesh=None, cache_dir=None, **kw:
-               IVFIndex(_embs_of(source), **kw))
+               IVFIndex(_embs_of(source),
+                        device=(cached_device_store(source)
+                                if hasattr(source, "embeddings") else None),
+                        **kw))
 register_index("sharded", _sharded_factory)
 
 
@@ -261,6 +276,10 @@ class SystemCfg:
     engine: Optional[EngineCfg] = None
     s_th_run: Optional[float] = None
     emb_dtype: str = "float16"         # store embedding dtype
+    quantize: bool = False             # convenience: emb_dtype="int8"
+    #                                    (symmetric per-row int8 shards +
+    #                                    scales; the device-resident int8
+    #                                    MIPS path serves them)
     shard_rows: int = SHARD_ROWS       # store shard size (rows)
 
     def __post_init__(self):
@@ -269,6 +288,10 @@ class SystemCfg:
                                                s_th_run=self.s_th_run)
             self.batched = dataclasses.replace(self.batched,
                                                s_th_run=self.s_th_run)
+        if self.quantize:
+            self.emb_dtype = "int8"
+        elif self.emb_dtype == "int8":
+            self.quantize = True
 
 
 @dataclasses.dataclass

@@ -27,9 +27,11 @@ k-means on every reopen.
 """
 from __future__ import annotations
 
+import functools
 import json
 import os
 import threading
+import weakref
 import zlib
 from pathlib import Path
 from typing import List, Optional, Tuple
@@ -37,6 +39,8 @@ from typing import List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.store import quantize_rows
 
 # Below this row count an exact flat scan is one small matmul and beats any
 # pruning overhead; above it IVF's nprobe/n_lists scan fraction wins. The
@@ -48,40 +52,243 @@ SHARD_MIN_ROWS = 4 * FLAT_MAX_ROWS
 
 def _device_embs(embs) -> jnp.ndarray:
     """Host→device (N, D) float32 without a full host-side copy: a
-    ``ShardedEmbeddings`` view moves one shard at a time (upcast + device
-    put per shard), so peak host memory is one shard, not the store."""
-    if hasattr(embs, "iter_shards"):
-        parts = [jnp.asarray(np.asarray(s, np.float32))
+    ``ShardedEmbeddings`` view moves one shard at a time — shipped in its
+    STORED dtype (fp16 halves the transfer, int8 quarters it) and upcast /
+    dequantized once on the device — so peak host memory is one shard and
+    the link never carries an inflated fp32 copy."""
+    if hasattr(embs, "iter_qshards"):
+        parts = [jnp.asarray(np.asarray(v)).astype(jnp.float32)
+                 * jnp.asarray(np.asarray(s))[:, None]
+                 for v, s in embs.iter_qshards()]
+    elif hasattr(embs, "iter_shards"):
+        parts = [jnp.asarray(np.asarray(s)).astype(jnp.float32)
                  for s in embs.iter_shards()]
-        if not parts:
-            return jnp.zeros(embs.shape, jnp.float32)
-        return parts[0] if len(parts) == 1 else jnp.concatenate(parts, 0)
-    return jnp.asarray(np.asarray(embs, np.float32))
+    else:
+        return jnp.asarray(np.asarray(embs)).astype(jnp.float32)
+    if not parts:
+        return jnp.zeros(embs.shape, jnp.float32)
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, 0)
+
+
+# ---------------------------------------------------------------------------
+# Device-resident store cache (the serving hot path's upload-once layer)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def _flat_scan_T(q, xT, k):
+    """The GEMM-layout flat scan: q (Q, D) @ xT (D, N) + top-k, one fused
+    dispatch over the device-resident operand."""
+    return jax.lax.top_k(q @ xT, k)
+
+
+# rows gathered to the host per DeviceStore.sync step (bounds peak host
+# memory during the initial upload of a paper-scale store)
+_SYNC_ROWS = 65536
+
+
+class DeviceStore:
+    """Device-resident copy of a store's embeddings: upload once, append
+    deltas, scan without ever re-shipping N×D.
+
+    Pre-PR, every index (re)build round-tripped the full matrix through
+    host fp32 (and §3.1 write-back rebuilds re-uploaded everything); this
+    cache is keyed per store (``device_store_for``) and survives tier
+    rebuilds, so a rebuild after write-backs ships only the new rows.
+
+    Residency layout per backend (``layout=``):
+
+    * ``"kernel"`` (default on TPU) — shards stay in their stored dtype:
+      int8 values + per-row f32 scales for quantized stores (feeding the
+      fused ``mips_topk_int8`` Pallas kernel; hot-path HBM bytes drop 4x
+      vs fp32), fp16/fp32 rows otherwise (``mips_topk``).
+    * ``"gemm"`` (default on CPU) — no int8 MXU exists and XLA's CPU int8
+      GEMM is several times SLOWER than Eigen's fp32, so shards are
+      dequantized/upcast ONCE at upload into the transposed (D, N) fp32
+      layout the CPU GEMM wants (measured ~2x over the old per-(N,D)
+      resident scan at N=100K, Q<=32). Disk/transfer savings and the
+      quantization error are identical to the kernel layout; the
+      RAM-for-speed trade is explicit.
+
+    ``search`` is exact over whatever representation is resident. On a
+    quantized store the kernel layout also quantizes the QUERY block
+    (int8 x int8 -> int32 on the MXU), so its scores differ from the
+    gemm layout's (f32 query x dequantized store) by the query's own
+    rounding — bounded by ~query_scale * sqrt(D)/127, ~2e-3 for
+    normalized 384-d embeddings; top-1 agreement on serving workloads is
+    >= 0.99 either way (tests pin both).
+    """
+
+    def __init__(self, source, layout: str = "auto"):
+        if layout == "auto":
+            layout = "kernel" if jax.default_backend() == "tpu" else "gemm"
+        if layout not in ("kernel", "gemm"):
+            raise ValueError(f"unknown DeviceStore layout {layout!r}")
+        self.layout = layout
+        self.n_rows = 0
+        self.dim: Optional[int] = None
+        self.quantized = False
+        self._xT = None        # gemm: (D, N) f32
+        self._x = None         # kernel: (N, D) stored dtype
+        self._scales = None    # kernel + quantized: (N,) f32
+        self.uploads = 0       # host→device transfers (tests/benchmarks)
+        self.sync(source)
+
+    @staticmethod
+    def _view(source):
+        return source.embeddings() if hasattr(source, "embeddings") \
+            else source
+
+    def sync(self, source) -> "DeviceStore":
+        """Ingest rows the device copy doesn't have yet (the §3.1
+        write-back delta); a no-op when the store hasn't grown."""
+        view = self._view(source)
+        n, d = int(view.shape[0]), int(view.shape[1])
+        if self.dim is None:
+            self.dim = d
+        elif d != self.dim:
+            raise ValueError(f"dim changed {self.dim} -> {d}")
+        if n < self.n_rows:
+            raise ValueError(
+                f"store shrank ({self.n_rows} -> {n} rows): DeviceStore "
+                "deltas are append-only — build a fresh one")
+        if n == self.n_rows:
+            return self
+        quantized = bool(getattr(view, "is_quantized", False))
+        if self.n_rows == 0:
+            self.quantized = quantized
+        elif quantized != self.quantized:
+            raise ValueError("store changed quantization mid-flight")
+
+        def gather(rows):
+            # view.take gathers ROWS on shard views; ndarray.take would
+            # gather flat elements, so plain arrays index instead
+            return view.take(rows) if hasattr(view, "iter_shards") \
+                else np.asarray(view[rows])
+
+        # chunked so peak host memory is one chunk, not the whole delta
+        chunks = [np.arange(lo, min(lo + _SYNC_ROWS, n))
+                  for lo in range(self.n_rows, n, _SYNC_ROWS)]
+        if self.layout == "gemm":
+            # dequant/upcast + transpose on the host per chunk: the scan
+            # operand must be PHYSICALLY (D, N) — transposing on device
+            # would fold back into the slow (N, D)-contraction dot
+            parts = [jnp.asarray(
+                np.ascontiguousarray(gather(c).astype(np.float32).T))
+                for c in chunks]
+            parts = ([] if self._xT is None else [self._xT]) + parts
+            self._xT = parts[0] if len(parts) == 1 \
+                else jnp.concatenate(parts, axis=1)
+        elif self.quantized:
+            got = [view.take_q(c) for c in chunks]
+            xs = ([] if self._x is None else [self._x]) \
+                + [jnp.asarray(v) for v, _ in got]
+            ss = ([] if self._scales is None else [self._scales]) \
+                + [jnp.asarray(s) for _, s in got]
+            self._x = xs[0] if len(xs) == 1 else jnp.concatenate(xs, 0)
+            self._scales = ss[0] if len(ss) == 1 \
+                else jnp.concatenate(ss, 0)
+        else:
+            xs = ([] if self._x is None else [self._x]) \
+                + [jnp.asarray(gather(c)) for c in chunks]
+            self._x = xs[0] if len(xs) == 1 else jnp.concatenate(xs, 0)
+        self.uploads += len(chunks)
+        self.n_rows = n
+        return self
+
+    def matrix(self) -> jnp.ndarray:
+        """The resident rows as a device (N, D) f32 matrix (IVF fits /
+        list builds reuse the residency instead of re-uploading)."""
+        if self.n_rows == 0:
+            return jnp.zeros((0, self.dim or 0), jnp.float32)
+        if self.layout == "gemm":
+            return self._xT.T
+        x = self._x.astype(jnp.float32)
+        return x * self._scales[:, None] if self.quantized else x
+
+    def search(self, queries, k: int):
+        """Exact flat MIPS over the resident rows: (vals, idx) ndarrays."""
+        q = np.asarray(queries, np.float32)
+        k = int(k)
+        if k > self.n_rows:
+            raise ValueError(f"k={k} exceeds store rows N={self.n_rows}")
+        if self.layout == "gemm":
+            v, i = _flat_scan_T(jnp.asarray(q), self._xT, k)
+        elif self.quantized:
+            from repro.kernels.ops import mips_topk_int8
+            q8, qs = quantize_rows(q)
+            v, i = mips_topk_int8(jnp.asarray(q8), jnp.asarray(qs),
+                                  self._x, self._scales, k)
+        else:
+            from repro.kernels.ops import mips_topk
+            # the kernel scores fp16/fp32 tiles as-is (the MXU dot
+            # upcasts in-register) — no per-search fp32 materialization
+            v, i = mips_topk(jnp.asarray(q), self._x, k)
+        return np.asarray(v), np.asarray(i)
+
+
+# One DeviceStore per live store object: index rebuilds (write-backs, tier
+# changes) get the cached residency + a delta sync instead of a re-upload.
+_DEVICE_STORES: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def cached_device_store(store) -> Optional[DeviceStore]:
+    """The store's cached ``DeviceStore`` if one already exists, delta-
+    synced — or None, WITHOUT creating residency. IVF refits use this:
+    a store that grew out of the flat tier reuses the flat residency it
+    already paid for, but an IVF-scale store never pins a full flat
+    device copy just to seed k-means."""
+    try:
+        ds = _DEVICE_STORES.get(store)
+    except TypeError:
+        return None
+    return ds.sync(store) if ds is not None else None
+
+
+def device_store_for(store, layout: str = "auto") -> DeviceStore:
+    """The per-store cached ``DeviceStore`` (created on first use, delta-
+    synced on every later call). Non-store sources (raw arrays, bare
+    views) get a fresh uncached instance — there is no stable identity to
+    key on. A cached entry is only reused when its layout matches."""
+    if layout == "auto":
+        layout = "kernel" if jax.default_backend() == "tpu" else "gemm"
+    if not hasattr(store, "embeddings"):
+        return DeviceStore(store, layout=layout)
+    try:
+        cached = _DEVICE_STORES.get(store)
+    except TypeError:
+        cached = None
+    if cached is not None and cached.layout == layout:
+        return cached.sync(store)
+    ds = DeviceStore(store, layout=layout)
+    try:
+        _DEVICE_STORES[store] = ds
+    except TypeError:
+        pass
+    return ds
 
 
 class FlatIndex:
-    """Exact MIPS. ``use_kernel`` routes the local scan through the Pallas
-    mips_topk op (interpret mode on CPU)."""
+    """Exact MIPS over a device-resident copy of the embeddings
+    (``DeviceStore``): the operand is shipped once in its stored dtype and
+    cast/dequantized once at upload — never per query batch — and index
+    rebuilds over the same store reuse the residency via
+    ``device_store_for``. ``use_kernel`` forces the Pallas kernel layout
+    (interpret mode on CPU); the default picks per backend."""
 
-    def __init__(self, embs: np.ndarray, use_kernel: bool = False):
-        self.embs = _device_embs(embs)
-        self.use_kernel = use_kernel
-        self._search = jax.jit(self._search_impl, static_argnums=(2,))
-
-    def _search_impl(self, q, embs, k):
-        if self.use_kernel:
-            from repro.kernels.ops import mips_topk
-            return mips_topk(q, embs, k)
-        s = q @ embs.T
-        return jax.lax.top_k(s, k)
+    def __init__(self, embs: np.ndarray = None, use_kernel: bool = False,
+                 device: Optional[DeviceStore] = None):
+        if device is None:
+            device = DeviceStore(embs,
+                                 layout="kernel" if use_kernel else "auto")
+        self.dev = device
+        self.use_kernel = use_kernel or device.layout == "kernel"
 
     def search(self, queries: np.ndarray, k: int):
-        q = jnp.asarray(np.asarray(queries, np.float32))
-        v, i = self._search(q, self.embs, k)
-        return np.asarray(v), np.asarray(i)
+        return self.dev.search(queries, k)
 
     def __len__(self):
-        return int(self.embs.shape[0])
+        return self.dev.n_rows
 
 
 # ---------------------------------------------------------------------------
@@ -133,8 +340,15 @@ class IVFIndex:
     """
 
     def __init__(self, embs: np.ndarray, n_lists: int = 64, nprobe: int = 8,
-                 seed: int = 0):
-        x = _device_embs(embs)
+                 seed: int = 0, device: Optional[DeviceStore] = None):
+        # an ALREADY-cached DeviceStore (auto_index passes one when the
+        # store grew out of the flat tier) seeds the fit from the resident
+        # rows instead of re-uploading N×D; otherwise the fit matrix is a
+        # transient local, released after __init__ — an IVF-scale store
+        # must not pin a flat device copy. Quantized views are accepted
+        # either way; centroids, fit, and padded probe lists stay fp32
+        # (coarse probing is too precision-sensitive to quantize).
+        x = device.matrix() if device is not None else _device_embs(embs)
         self.n_total = int(x.shape[0])
         # clamp: k-means cannot seed more lists than there are rows
         self.n_lists = max(1, min(n_lists, self.n_total))
@@ -469,28 +683,51 @@ class IncrementalIndex:
 
 
 class ShardedIndex:
-    """Mesh-sharded exact MIPS: rows over ``shard_axis``, distributed top-k."""
+    """Mesh-sharded exact MIPS: rows over ``shard_axis``, distributed top-k.
+
+    Quantized views shard the int8 values + per-row scales as-is (4x less
+    HBM per device; each local scan scores its int8 shard and dequantizes
+    in place — see distributed/topk.py); float inputs shard fp32 exactly
+    as before."""
 
     def __init__(self, embs: np.ndarray, mesh, shard_axis: str = "model"):
         from jax.sharding import NamedSharding, PartitionSpec as P
         n_sh = mesh.shape[shard_axis]
-        N, D = embs.shape
-        pad = (-N) % n_sh
-        if pad:
-            embs = np.concatenate(
-                [embs, np.full((pad, D), -1e4, embs.dtype)], axis=0)
-        self.n_real = N
         self.mesh = mesh
         self.shard_axis = shard_axis
-        sh = NamedSharding(mesh, P(shard_axis, None))
-        self.embs = jax.device_put(
-            jnp.asarray(np.asarray(embs, np.float32)), sh)
+        self.scales = None
+        row_sh = NamedSharding(mesh, P(shard_axis, None))
+        if getattr(embs, "is_quantized", False):
+            vals, scales = embs.take_q(np.arange(embs.shape[0]))
+            N, D = vals.shape
+            pad = (-N) % n_sh
+            if pad:       # zero rows score 0; masked out via n_real
+                vals = np.concatenate(
+                    [vals, np.zeros((pad, D), np.int8)], axis=0)
+                scales = np.concatenate(
+                    [scales, np.ones(pad, np.float32)])
+            self.embs = jax.device_put(jnp.asarray(vals), row_sh)
+            self.scales = jax.device_put(
+                jnp.asarray(scales), NamedSharding(mesh, P(shard_axis)))
+            self.n_real = N
+        else:
+            embs = np.asarray(embs)
+            N, D = embs.shape
+            pad = (-N) % n_sh
+            if pad:
+                embs = np.concatenate(
+                    [embs, np.full((pad, D), -1e4, embs.dtype)], axis=0)
+            self.n_real = N
+            self.embs = jax.device_put(
+                jnp.asarray(np.asarray(embs, np.float32)), row_sh)
 
     def search(self, queries: np.ndarray, k: int):
         from repro.distributed.topk import sharded_mips_topk
         q = jnp.asarray(np.asarray(queries, np.float32))
-        v, i = sharded_mips_topk(q, self.embs, k, mesh=self.mesh,
-                                 shard_axis=self.shard_axis)
+        v, i = sharded_mips_topk(
+            q, self.embs, k, mesh=self.mesh, shard_axis=self.shard_axis,
+            scales=self.scales,
+            n_real=self.n_real if self.scales is not None else None)
         return np.asarray(v), np.asarray(i)
 
     def __len__(self):
@@ -561,8 +798,9 @@ def auto_index(store, mesh=None, *, shard_axis: str = "model",
     tier = select_tier(n_rows, axis_size,
                        flat_max_rows=flat_max_rows,
                        shard_min_rows=shard_min_rows)
+    is_store = hasattr(store, "embeddings")
     if tier == "sharded":
-        return ShardedIndex(np.asarray(embs), mesh, shard_axis=shard_axis)
+        return ShardedIndex(embs, mesh, shard_axis=shard_axis)
     if tier == "ivf":
         n_lists, nprobe = ivf_params(n_rows)
         cache = Path(cache_dir) / IVF_CACHE_NAME if cache_dir else None
@@ -574,10 +812,14 @@ def auto_index(store, mesh=None, *, shard_axis: str = "model",
                     return idx
             except Exception:
                 pass              # unreadable/stale cache: rebuild below
-        idx = IVFIndex(embs, n_lists=n_lists, nprobe=nprobe, seed=seed)
+        dev = cached_device_store(store) if is_store else None
+        idx = IVFIndex(embs, n_lists=n_lists, nprobe=nprobe, seed=seed,
+                       device=dev)
         if cache is not None:
             idx.save(cache)
         return idx
-    if use_kernel is None:
-        use_kernel = jax.default_backend() == "tpu"
-    return FlatIndex(embs, use_kernel=use_kernel)
+    layout = "auto" if use_kernel is None else \
+        ("kernel" if use_kernel else "gemm")
+    dev = device_store_for(store, layout=layout) if is_store \
+        else DeviceStore(embs, layout=layout)
+    return FlatIndex(device=dev, use_kernel=dev.layout == "kernel")

@@ -34,13 +34,15 @@ state, so they cannot see each other in the mask set (their collisions
 are still caught by the Gram check).
 
 Dedup similarities are computed on embeddings round-tripped through the
-store dtype (float16 by default): an uninterrupted run and a resumed run
-(which rebuilds its dedup index from the store's float16 shards) then see
-bit-identical similarity scores — with raw float32 the two could disagree
-on candidates sitting exactly at the 0.99 threshold. The flip side: with
-a float16 store the pipeline's accept/discard decisions can in principle
-differ from the raw-float32 sequential generator for candidates straddling
-the threshold under one rounding but not the other.
+store dtype (``store.roundtrip_dtype`` — float16 by default, symmetric
+per-row int8 quantize/dequantize for ``emb_dtype="int8"``): an
+uninterrupted run and a resumed run (which rebuilds its dedup index from
+the store's own shards) then see bit-identical similarity scores — with
+raw float32 the two could disagree on candidates sitting exactly at the
+0.99 threshold. The flip side: with a narrowed store dtype the pipeline's
+accept/discard decisions can in principle differ from the raw-float32
+sequential generator for candidates straddling the threshold under one
+rounding but not the other.
 """
 from __future__ import annotations
 
@@ -53,6 +55,7 @@ import numpy as np
 
 from repro.core.generator import GenCfg, QueryLM, masked_for_chunk
 from repro.core.index import FLAT_MAX_ROWS, IncrementalIndex
+from repro.core.store import roundtrip_dtype
 
 STATE_KEY = "gen_state"
 STATE_VERSION = 1
@@ -255,8 +258,7 @@ class PrecomputePipeline:
             attempts += w
             # 2. one embedding batch per wave
             E = np.asarray(self.embedder.encode(qs), np.float32)
-            Ed = E.astype(store_dtype).astype(np.float32) \
-                if store_dtype != np.float32 else E
+            Ed = roundtrip_dtype(E, store_dtype)
             # 3. index-backed dedup + wave-internal Gram check
             if index is not None and len(index):
                 base = index.max_sim(Ed)

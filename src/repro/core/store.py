@@ -6,9 +6,25 @@ Layout on disk (root/): see docs/ARCHITECTURE.md for the full format table.
                            (e.g. the precompute pipeline's ``gen_state``
                            resume checkpoint)
   emb_XXXX.npy           — embedding shards, (rows, dim) float16 memmap
+                           (or int8 when ``emb_dtype="int8"``)
+  emb_XXXX_scale.npy     — int8 stores only: the shard's per-row f32
+                           dequant scales (rows,)
   text.jsonl             — one {"q": query, "r": response} per row
   offsets.npy            — byte offset of each row in text.jsonl
   index_ivf.npz          — optional persisted IVF index (auto_index cache)
+
+Quantized stores (``emb_dtype="int8"``): rows are quantized symmetrically
+per row — ``values = rint(row / scale)`` with ``scale = max|row| / 127`` —
+as they are ingested, so a shard on disk is int8 values plus an f32 scale
+per row (~26% of the fp32 bytes, ~51% of fp16; the paper's 830 MB edge
+budget shrinks accordingly). Per-row quantization makes shard layout a
+pure function of the row sequence (merging a partial tail shard is a
+plain concatenation, no re-quantization), which is what keeps killed +
+resumed builds byte-identical. ``embeddings()`` returns a
+``QuantizedShardedEmbeddings`` view that dequantizes on access and
+exposes the raw int8 parts for device upload (the int8 serving path in
+core/index.py / kernels/mips_topk_int8.py). Old fp32/fp16 manifests are
+untouched by any of this and load exactly as before.
 
 Embeddings are the "index tier" (paper: 810 MB DiskANN index for 150K),
 responses the "metadata tier" (paper: 20 MB); ``storage_bytes()`` reports
@@ -33,6 +49,47 @@ from typing import Iterator, List, Sequence, Tuple
 import numpy as np
 
 SHARD_ROWS = 32768
+
+
+# ---------------------------------------------------------------------------
+# Symmetric per-row int8 quantization (the ``emb_dtype="int8"`` store format
+# and the query-side quantization of the int8 serving path)
+# ---------------------------------------------------------------------------
+
+
+def quantize_rows(embs: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """(n, d) float -> (int8 values (n, d), f32 scales (n,)).
+
+    Symmetric per-row: ``scale = max|row| / 127``, ``values =
+    rint(row / scale)`` (zero rows get scale 1 so dequant stays exact).
+    Quantizing an already-round-tripped row reproduces it bit-for-bit —
+    the max element maps back to exactly ±127 — which is what lets shard
+    merges and resumed builds stay byte-identical without ever keeping
+    the original f32 around."""
+    embs = np.asarray(embs, np.float32)
+    amax = np.abs(embs).max(axis=1) if embs.shape[0] else \
+        np.zeros((0,), np.float32)
+    scale = np.where(amax > 0, amax / 127.0, 1.0).astype(np.float32)
+    vals = np.clip(np.rint(embs / scale[:, None]), -127, 127)
+    return vals.astype(np.int8), scale
+
+
+def dequantize_rows(vals: np.ndarray, scale: np.ndarray) -> np.ndarray:
+    """Inverse of ``quantize_rows``: int8 (n, d) + f32 (n,) -> f32 (n, d)."""
+    return np.asarray(vals, np.float32) * \
+        np.asarray(scale, np.float32)[:, None]
+
+
+def roundtrip_dtype(embs: np.ndarray, dtype) -> np.ndarray:
+    """f32 embeddings as they will read back from a store of ``dtype`` —
+    the dedup pipeline scores on this so an in-run index and one rebuilt
+    from disk see bit-identical similarities (core/precompute.py)."""
+    dtype = np.dtype(dtype)
+    if dtype == np.int8:
+        return dequantize_rows(*quantize_rows(embs))
+    if dtype == np.float32:
+        return np.asarray(embs, np.float32)
+    return np.asarray(embs).astype(dtype).astype(np.float32)
 
 
 class ShardedEmbeddings:
@@ -67,10 +124,7 @@ class ShardedEmbeddings:
         out = np.concatenate([np.asarray(p) for p in self.parts], axis=0)
         return out.astype(dtype) if dtype is not None else out
 
-    def take(self, rows) -> np.ndarray:
-        """Gather arbitrary rows (int array or boolean mask); reads only
-        the requested rows from each shard. Negative indices wrap and
-        out-of-range ones raise, matching ndarray semantics."""
+    def _norm_rows(self, rows) -> np.ndarray:
         rows = np.asarray(rows)
         if rows.dtype == bool:
             if rows.shape[0] != self.shape[0]:
@@ -84,6 +138,9 @@ class ShardedEmbeddings:
         if rows.size and (rows.min() < 0 or rows.max() >= n):
             raise IndexError(
                 f"row index out of range for {n}-row embedding view")
+        return rows
+
+    def _gather(self, rows: np.ndarray) -> np.ndarray:
         out = np.empty((rows.shape[0], self.shape[1]), self.dtype)
         lo = 0
         for p in self.parts:
@@ -94,12 +151,76 @@ class ShardedEmbeddings:
             lo = hi
         return out
 
+    def take(self, rows) -> np.ndarray:
+        """Gather arbitrary rows (int array or boolean mask); reads only
+        the requested rows from each shard. Negative indices wrap and
+        out-of-range ones raise, matching ndarray semantics."""
+        return self._gather(self._norm_rows(rows))
+
     def __getitem__(self, key):
         if isinstance(key, (int, np.integer)):
             return self.take(np.asarray([key]))[0]
         if isinstance(key, slice):
             return self.take(np.arange(*key.indices(self.shape[0])))
         return self.take(key)
+
+
+class QuantizedShardedEmbeddings(ShardedEmbeddings):
+    """Lazy view over int8 shards + per-row scales.
+
+    Float consumers (index builders, dedup, benchmarks) see dequantized
+    f32 through every inherited accessor (``take`` / slicing /
+    ``iter_shards`` / ``np.asarray``), so a quantized store drops into
+    any code written for float views. The quantized serving path reads
+    the raw parts instead: ``iter_qshards()`` / ``take_q()`` hand
+    (int8 values, f32 scales) to the device cache so only stored bytes
+    ever cross the host→device link (core/index.DeviceStore)."""
+
+    is_quantized = True
+
+    def __init__(self, parts: List[np.ndarray], scales: List[np.ndarray],
+                 dim: int):
+        super().__init__(parts, dim, np.float32)   # consumers see f32
+        self.scales = scales
+        self.qdtype = np.dtype(np.int8)
+
+    def iter_qshards(self) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+        yield from zip(self.parts, self.scales)
+
+    def iter_shards(self) -> Iterator[np.ndarray]:
+        for p, s in zip(self.parts, self.scales):
+            yield dequantize_rows(np.asarray(p), np.asarray(s))
+
+    def __array__(self, dtype=None, copy=None):
+        if not self.parts:
+            return np.zeros(self.shape, dtype or self.dtype)
+        out = np.concatenate(list(self.iter_shards()), axis=0)
+        return out.astype(dtype) if dtype is not None else out
+
+    def _gather_q(self, rows: np.ndarray):
+        vals = np.empty((rows.shape[0], self.shape[1]), np.int8)
+        scale = np.empty((rows.shape[0],), np.float32)
+        lo = 0
+        for p, s in zip(self.parts, self.scales):
+            hi = lo + p.shape[0]
+            m = (rows >= lo) & (rows < hi)
+            if m.any():
+                local = rows[m] - lo
+                vals[m] = np.asarray(p[local])
+                scale[m] = np.asarray(s[local])
+            lo = hi
+        return vals, scale
+
+    def _gather(self, rows: np.ndarray) -> np.ndarray:
+        return dequantize_rows(*self._gather_q(rows))
+
+    def take_q(self, rows) -> Tuple[np.ndarray, np.ndarray]:
+        """Raw row gather: (int8 values (n, d), f32 scales (n,))."""
+        return self._gather_q(self._norm_rows(rows))
+
+
+# backward-compat flag so callers can branch without isinstance checks
+ShardedEmbeddings.is_quantized = False
 
 
 class PrecomputedStore:
@@ -121,9 +242,17 @@ class PrecomputedStore:
         self._text_f = open(self.root / "text.jsonl", "w+", encoding="utf-8")
         self._offsets: List[int] = []
         self._pending_embs: List[np.ndarray] = []
+        # int8 stores: per-row scales parallel to _pending_embs (which then
+        # holds already-quantized int8 batches — per-row quantization is
+        # batching-independent, so quantize-at-ingest == quantize-on-flush)
+        self._pending_scales: List[np.ndarray] = []
         self._pending_rows = 0
         # one shared file handle: seek+read / seek+write must be atomic
         self._lock = threading.Lock()
+
+    @property
+    def quantized(self) -> bool:
+        return self.emb_dtype == np.int8
 
     # -- lifecycle ----------------------------------------------------------
     def close(self):
@@ -163,7 +292,12 @@ class PrecomputedStore:
             for q, r in zip(queries, responses):
                 self._offsets.append(self._text_f.tell())
                 self._text_f.write(json.dumps({"q": q, "r": r}) + "\n")
-            self._pending_embs.append(embs.astype(self.emb_dtype))
+            if self.quantized:
+                qv, sc = quantize_rows(embs)
+                self._pending_embs.append(qv)
+                self._pending_scales.append(sc)
+            else:
+                self._pending_embs.append(embs.astype(self.emb_dtype))
             self._pending_rows += len(queries)
             self.count += len(queries)
             while self._pending_rows >= self.shard_rows:
@@ -179,7 +313,15 @@ class PrecomputedStore:
         # name on later flushes, and the committed manifest may already
         # reference it — a torn overwrite would corrupt the store
         self._atomic_npy(name, shard)
-        self.shards.append({"file": name, "rows": int(shard.shape[0])})
+        entry = {"file": name, "rows": int(shard.shape[0])}
+        if self.quantized:
+            sbuf = np.concatenate(self._pending_scales)
+            sshard, srest = sbuf[:rows], sbuf[rows:]
+            self._pending_scales = [srest] if len(srest) else []
+            sname = f"emb_{len(self.shards):04d}_scale.npy"
+            self._atomic_npy(sname, sshard)
+            entry["scale_file"] = sname
+        self.shards.append(entry)
 
     def flush(self):
         with self._lock:
@@ -193,6 +335,12 @@ class PrecomputedStore:
                     last = self.shards.pop()
                     prev = np.load(self.root / last["file"])
                     self._pending_embs.insert(0, prev)
+                    if self.quantized:
+                        # per-row scales merge by plain concat — no
+                        # dequant/requant, so the merged shard is byte-
+                        # identical to one written in a single flush
+                        self._pending_scales.insert(
+                            0, np.load(self.root / last["scale_file"]))
                     self._pending_rows += last["rows"]
                 while self._pending_rows >= self.shard_rows:
                     self._flush_shard(self.shard_rows)
@@ -247,6 +395,7 @@ class PrecomputedStore:
                 # trailing rows a killed writer appended but never committed
                 st._text_f.truncate(text_bytes)
         st._pending_embs, st._pending_rows = [], 0
+        st._pending_scales = []
         st._lock = threading.Lock()
         return st
 
@@ -256,13 +405,22 @@ class PrecomputedStore:
         ``mmap=True`` (default) returns a zero-copy ``ShardedEmbeddings``
         view over the per-shard memmaps — nothing is materialized in RAM
         until a caller asks for rows. ``mmap=False`` returns a plain
-        materialized ndarray.
+        materialized ndarray. Quantized stores return a
+        ``QuantizedShardedEmbeddings`` view (f32 on access, raw int8 +
+        scales via its ``*_q`` accessors); ``mmap=False`` dequantizes.
         """
-        parts = [np.load(self.root / s["file"],
-                         mmap_mode="r" if mmap else None)
+        mode = "r" if mmap else None
+        parts = [np.load(self.root / s["file"], mmap_mode=mode)
                  for s in self.shards]
         if self._pending_embs:
             parts += self._pending_embs
+        if self.quantized:
+            scales = [np.load(self.root / s["scale_file"], mmap_mode=mode)
+                      for s in self.shards] + self._pending_scales
+            view = QuantizedShardedEmbeddings(parts, scales, self.dim)
+            if not parts:
+                return np.zeros((0, self.dim), np.float32)
+            return view if mmap else np.asarray(view)
         if not parts:
             return np.zeros((0, self.dim), self.emb_dtype)
         if mmap:
@@ -282,6 +440,8 @@ class PrecomputedStore:
     # -- accounting -----------------------------------------------------------
     def storage_bytes(self) -> dict:
         index_b = sum((self.root / s["file"]).stat().st_size
+                      + ((self.root / s["scale_file"]).stat().st_size
+                         if "scale_file" in s else 0)
                       for s in self.shards)
         text_p = self.root / "text.jsonl"
         off_p = self.root / "offsets.npy"

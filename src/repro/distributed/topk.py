@@ -5,6 +5,13 @@ each device scans its shard (one matmul — the Pallas ``mips_topk`` kernel on
 real TPUs), takes a local top-k, then an all-gather of the (k-sized)
 candidate lists and a final top-k. Traffic per query: shards * k * 8 bytes —
 independent of store size N.
+
+Quantized stores shard int8 values + per-row f32 scales (``scales=``): the
+local scan scores the int8 shard directly (int8 operand, f32 accumulate —
+the MXU's native mixed mode on TPU) and fuses the scale dequant, so each
+device holds and streams ~1/4 of the fp32 bytes. int8 cannot encode the
+float path's -1e4 padding fill, so padded rows are masked out by global
+row id instead (``n_real=``).
 """
 from __future__ import annotations
 
@@ -14,14 +21,19 @@ from jax.sharding import PartitionSpec as P
 
 from repro.distributed.sharding import shard_map
 
+NEG = -1e30
+
 
 def sharded_mips_topk(queries, emb, k, *, mesh, shard_axis="model",
-                      local_scan=None):
+                      local_scan=None, scales=None, n_real=None):
     """queries: (Q, D) replicated; emb: (N, D) row-sharded over shard_axis.
 
     Returns (scores (Q, k), indices (Q, k)) — replicated, GLOBAL row ids.
     ``local_scan(q, e, k) -> (vals, idx)`` optionally overrides the local
-    shard scan (e.g. with the Pallas kernel); default is matmul + lax.top_k.
+    shard scan (e.g. with the Pallas kernel) on the float path; default is
+    matmul + lax.top_k. ``scales`` (row-sharded (N,) f32) switches to the
+    int8 shard scan; ``n_real`` masks padded rows (global id >= n_real)
+    before the local top-k.
     """
 
     def default_scan(q, e, k):
@@ -30,15 +42,42 @@ def sharded_mips_topk(queries, emb, k, *, mesh, shard_axis="model",
 
     scan = local_scan or default_scan
 
-    def local(q, e):
-        offset = jax.lax.axis_index(shard_axis) * e.shape[0]
-        v, i = scan(q, e, k)
+    def masked(s, offset):
+        if n_real is None:
+            return s
+        rows = offset + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        return jnp.where(rows < n_real, s, NEG)
+
+    def combine(v, i, offset):
         i = i + offset
         vg = jax.lax.all_gather(v, shard_axis, axis=1, tiled=True)
         ig = jax.lax.all_gather(i, shard_axis, axis=1, tiled=True)
         vf, pos = jax.lax.top_k(vg, k)
         return vf, jnp.take_along_axis(ig, pos, axis=1)
 
-    sm = shard_map(local, mesh=mesh, in_specs=(P(), P(shard_axis)),
+    if scales is not None:
+        def local(q, e, sc):
+            offset = jax.lax.axis_index(shard_axis) * e.shape[0]
+            s = jax.lax.dot_general(q, e, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+            v, i = jax.lax.top_k(masked(s * sc[None, :], offset), k)
+            return combine(v, i, offset)
+
+        sm = shard_map(local, mesh=mesh,
+                       in_specs=(P(), P(shard_axis), P(shard_axis)),
                        out_specs=(P(), P()), check_vma=False)
+        return sm(queries, emb, scales)
+
+    def local(q, e):
+        offset = jax.lax.axis_index(shard_axis) * e.shape[0]
+        if local_scan is None:
+            s = masked(q.astype(jnp.float32) @ e.T.astype(jnp.float32),
+                       offset)
+            v, i = jax.lax.top_k(s, k)
+        else:
+            v, i = scan(q, e, k)
+        return combine(v, i, offset)
+
+    sm = shard_map(local, mesh=mesh, in_specs=(P(), P(shard_axis)),
+                   out_specs=(P(), P()), check_vma=False)
     return sm(queries, emb)

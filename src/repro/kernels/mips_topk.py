@@ -3,9 +3,10 @@
 The paper scans a DiskANN graph on CPU; on TPU the same search is a matmul
 (DESIGN.md §3): the store shard streams through VMEM in (TILE_N, D) blocks,
 each block scoring against the resident query block on the MXU, followed by
-an on-chip iterative top-k over the tile. The host-side combine (ops.py)
-reduces the (n_tiles, Q, K) candidates with one final lax.top_k —
-O(n_tiles * K) per query, independent of N.
+an on-chip streaming top-k over the tile (``tile_topk``, shared with the
+int8 kernel in mips_topk_int8.py). The host-side combine (ops.py) reduces
+the (n_tiles, Q, K) candidates with one final lax.top_k — O(n_tiles * K)
+per query, independent of N.
 
 Tiling:
   q   : (Q, D)       resident in VMEM for the whole grid (Q <= ~1024)
@@ -25,6 +26,109 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 NEG = -1e30
+# tile_topk pads candidate indices with this sentinel; it must sort after
+# every real (< 2^24) row id under the (value desc, index asc) order
+_IDX_PAD = 2 ** 30
+
+
+def _ge(av, ai, bv, bi):
+    """Strict total order used everywhere in the tile top-k: value
+    descending, index ascending on value ties. Matching the numpy
+    reference's tie-break exactly is what makes the int8 kernel's
+    bit-for-bit validation possible."""
+    return (av > bv) | ((av == bv) & (ai <= bi))
+
+
+def _chunk_topk(s, k, col0):
+    """Exact top-k of one (Q, c) score chunk by k masked argmax passes,
+    emitted in (value desc, index asc) order. ``col0`` is the chunk's
+    first column; returned indices are tile-local."""
+    cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    vals, idxs = [], []
+    for _ in range(k):
+        m = jnp.max(s, axis=1)
+        a = jnp.argmax(s, axis=1).astype(jnp.int32)   # first max: lowest idx
+        vals.append(m)
+        idxs.append(a + col0)
+        s = jnp.where(cols == a[:, None], NEG, s)
+    return jnp.stack(vals, axis=1), jnp.stack(idxs, axis=1)
+
+
+def _bitonic_merge_desc(v, i):
+    """Sort a bitonic (Q, m) candidate list descending (m a power of two):
+    log2(m) compare-exchange stages, each one reshape + min/max — no
+    gathers, so it lowers cleanly on the VPU."""
+    m = v.shape[-1]
+    stride = m // 2
+    while stride >= 1:
+        shp = v.shape
+        v4 = v.reshape(shp[:-1] + (m // (2 * stride), 2, stride))
+        i4 = i.reshape(v4.shape)
+        av, bv = v4[..., 0, :], v4[..., 1, :]
+        ai, bi = i4[..., 0, :], i4[..., 1, :]
+        ge = _ge(av, ai, bv, bi)
+        v = jnp.stack([jnp.where(ge, av, bv), jnp.where(ge, bv, av)],
+                      axis=-2).reshape(shp)
+        i = jnp.stack([jnp.where(ge, ai, bi), jnp.where(ge, bi, ai)],
+                      axis=-2).reshape(shp)
+        stride //= 2
+    return v, i
+
+
+def _merge_desc(rv, ri, cv, ci):
+    """Merge two descending-sorted (Q, m) candidate lists into the top-m
+    of their union. Max-pairing rv[j] against reversed cv picks the top-m
+    multiset in one element-wise pass (the first stage of a bitonic merge
+    of [rv ; reverse(cv)]); the result is bitonic, so log2(m) further
+    stages restore descending order."""
+    cv_r, ci_r = cv[..., ::-1], ci[..., ::-1]
+    take = _ge(rv, ri, cv_r, ci_r)
+    v = jnp.where(take, rv, cv_r)
+    i = jnp.where(take, ri, ci_r)
+    return _bitonic_merge_desc(v, i)
+
+
+def tile_topk(s, k, *, chunk=128):
+    """Exact top-k along the last axis of ``s`` (Q, T), ordered by
+    (value desc, index asc). Returns (vals (Q, k), idx (Q, k) int32).
+
+    Replaces the old k-pass masked argmax over the FULL tile (which also
+    rewrote the whole (Q, T) block with a masking ``where`` every pass —
+    2k full-tile traversals): the tile is streamed once in lane-width
+    chunks, each chunk's top-k is selected inside that small hot block,
+    and the running candidate list is folded in with an O(k log k)
+    bitonic max-pairing merge on (Q, k). The (Q, T) score block is read
+    once and never written back.
+    """
+    Q, T = s.shape
+    if k > T:
+        raise ValueError(f"tile_topk: k={k} exceeds tile width {T}")
+    c = min(chunk, T)
+    if k > c or T % c:
+        c = T                      # rare big-k / ragged tile: single chunk
+    if c == T:                     # one chunk: plain selection, no merge
+        return _chunk_topk(s, k, 0)
+    # pad the candidate lists to a power of two for the merge network
+    k2 = 1
+    while k2 < k:
+        k2 *= 2
+    pad_v = jnp.full((Q, k2 - k), NEG, s.dtype)
+    pad_i = jnp.full((Q, k2 - k), _IDX_PAD, jnp.int32)
+
+    def padded(v, i):
+        if k2 == k:
+            return v, i
+        return (jnp.concatenate([v, pad_v], axis=1),
+                jnp.concatenate([i, pad_i], axis=1))
+
+    rv = ri = None
+    for lo in range(0, T, c):
+        cv, ci = padded(*_chunk_topk(s[:, lo:lo + c], k, lo))
+        if rv is None:
+            rv, ri = cv, ci
+        else:
+            rv, ri = _merge_desc(rv, ri, cv, ci)
+    return rv[:, :k], ri[:, :k]
 
 
 def _mips_kernel(q_ref, x_ref, vals_ref, idx_ref, *, k, tile_n, n_real):
@@ -36,18 +140,15 @@ def _mips_kernel(q_ref, x_ref, vals_ref, idx_ref, *, k, tile_n, n_real):
     row_global = i * tile_n + jax.lax.broadcasted_iota(jnp.int32,
                                                        s.shape, 1)
     s = jnp.where(row_global < n_real, s, NEG)
-    cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    for kk in range(k):                               # iterative top-k
-        m = jnp.max(s, axis=1)                        # (Q,)
-        a = jnp.argmax(s, axis=1).astype(jnp.int32)   # (Q,)
-        vals_ref[0, :, kk] = m
-        idx_ref[0, :, kk] = a
-        s = jnp.where(cols == a[:, None], NEG, s)
+    vals, idx = tile_topk(s, k)
+    vals_ref[0] = vals
+    idx_ref[0] = idx
 
 
 def mips_topk_pallas(q, x, k, *, tile_n=512, interpret=True):
-    """q: (Q, D) f32; x: (N, D) f32. Returns per-tile candidates
-    (vals (nt, Q, k), idx-global (nt, Q, k))."""
+    """q: (Q, D) f32; x: (N, D) float (f32/f16/bf16 — the MXU dot upcasts
+    once in-register, so fp16 shards never materialize an fp32 copy).
+    Returns per-tile candidates (vals (nt, Q, k), idx-global (nt, Q, k))."""
     Q, D = q.shape
     N = x.shape[0]
     nt = -(-N // tile_n)

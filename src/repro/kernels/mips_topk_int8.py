@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: quantized MIPS over int8 store tiles (DESIGN.md §3,
+the device-resident serving path).
+
+The store's embedding shards are symmetric per-row int8 (values +
+one f32 scale per row, see core/store.py); queries are quantized the same
+way at dispatch. Each grid step scores one (TILE_N, D) int8 tile against
+the resident int8 query block on the MXU with int32 accumulation —
+exact: |s| <= 127*127*D stays below 2^24 for D <= 1040, so the f32 cast
+of the accumulator is lossless at our D=384 — then fuses the per-row
+scale dequant (s * q_scale * x_scale) and the streaming tile top-k
+(``tile_topk``, shared with the fp32 kernel) before anything leaves VMEM.
+HBM traffic per tile is TILE_N * (D + 4) bytes instead of the fp32 path's
+4 * TILE_N * D — the 4x bandwidth cut that motivates the whole path.
+
+The dequant multiply order (int32 -> f32, then * q_scale, then * x_scale)
+and the (value desc, index asc) tie-break are part of the kernel contract:
+tests validate the result BIT-FOR-BIT against the numpy reference
+(ref.mips_topk_int8_ref) in interpret mode.
+
+Note on real-TPU tiling: int8 VMEM tiles are (32, 128); small Q blocks
+are sublane-padded by Mosaic, which wastes a few rows but stays correct.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.mips_topk import NEG, tile_topk
+
+
+def _mips_int8_kernel(q_ref, qs_ref, x_ref, xs_ref, vals_ref, idx_ref, *,
+                      k, tile_n, n_real):
+    i = pl.program_id(0)
+    q = q_ref[...]                                    # (Q, D) int8
+    x = x_ref[...]                                    # (TILE_N, D) int8
+    s = jnp.dot(q, x.T, preferred_element_type=jnp.int32)  # exact int32
+    # fused dequant: one f32 (Q, TILE_N) block, never materialized off-chip
+    s = s.astype(jnp.float32) * qs_ref[...] * xs_ref[...].T
+    row_global = i * tile_n + jax.lax.broadcasted_iota(jnp.int32,
+                                                       s.shape, 1)
+    s = jnp.where(row_global < n_real, s, NEG)
+    vals, idx = tile_topk(s, k)
+    vals_ref[0] = vals
+    idx_ref[0] = idx
+
+
+def mips_topk_int8_pallas(q, q_scale, x, x_scale, k, *, tile_n=512,
+                          interpret=True):
+    """q: (Q, D) int8; q_scale: (Q,) f32; x: (N, D) int8; x_scale: (N,) f32.
+    Returns per-tile candidates (vals (nt, Q, k) f32, idx-global (nt, Q, k))
+    where vals are dequantized scores q_scale[r] * x_scale[c] * <q_r, x_c>.
+    """
+    Q, D = q.shape
+    N = x.shape[0]
+    nt = -(-N // tile_n)
+    N_pad = nt * tile_n
+    if N_pad != N:                # zero rows + unit scales; masked by n_real
+        x = jnp.pad(x, ((0, N_pad - N), (0, 0)))
+        x_scale = jnp.pad(x_scale, (0, N_pad - N), constant_values=1.0)
+    Dp = -(-D // 128) * 128
+    if Dp != D:                   # zero-padding is exact for the int32 dot
+        q = jnp.pad(q, ((0, 0), (0, Dp - D)))
+        x = jnp.pad(x, ((0, 0), (0, Dp - D)))
+    qs = q_scale.astype(jnp.float32).reshape(Q, 1)
+    xs = x_scale.astype(jnp.float32).reshape(N_pad, 1)
+
+    kernel = functools.partial(_mips_int8_kernel, k=k, tile_n=tile_n,
+                               n_real=N)
+    vals, idx = pl.pallas_call(
+        kernel,
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec((Q, Dp), lambda i: (0, 0)),        # q resident
+            pl.BlockSpec((Q, 1), lambda i: (0, 0)),         # q scales
+            pl.BlockSpec((tile_n, Dp), lambda i: (i, 0)),   # x streamed
+            pl.BlockSpec((tile_n, 1), lambda i: (i, 0)),    # x scales
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, Q, k), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nt, Q, k), jnp.float32),
+            jax.ShapeDtypeStruct((nt, Q, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q, qs, x, xs)
+    offs = (jnp.arange(nt, dtype=jnp.int32) * tile_n)[:, None, None]
+    return vals, idx + offs

@@ -15,10 +15,24 @@ from repro.kernels.decode_attention import (combine_splits,
                                             decode_attention_pallas)
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.mips_topk import mips_topk_pallas
+from repro.kernels.mips_topk_int8 import mips_topk_int8_pallas
 
 
 def _default_interpret():
     return jax.default_backend() != "tpu"
+
+
+def _combine_tiles(vals, idx, k):
+    """Reduce per-tile candidates (nt, Q, k) to the global top-k. Tiles are
+    flattened in (tile, rank) order, which is (value desc, index asc)
+    within a tile and index-asc across tiles — so lax.top_k's
+    first-occurrence tie-break preserves the kernels' (value desc, index
+    asc) contract end to end."""
+    nt, Q = vals.shape[0], vals.shape[1]
+    vflat = jnp.moveaxis(vals, 0, 1).reshape(Q, nt * k)
+    iflat = jnp.moveaxis(idx, 0, 1).reshape(Q, nt * k)
+    v, pos = jax.lax.top_k(vflat, k)
+    return v, jnp.take_along_axis(iflat, pos, axis=1)
 
 
 @functools.partial(jax.jit, static_argnums=(2, 3))
@@ -35,12 +49,24 @@ def mips_topk(q, x, k, tile_n=512):
     tile_n = max(min(tile_n, -(-n // 128) * 128), k)
     vals, idx = mips_topk_pallas(q, x, k, tile_n=tile_n,
                                  interpret=_default_interpret())
-    nt = vals.shape[0]
-    Q = vals.shape[1]
-    vflat = jnp.moveaxis(vals, 0, 1).reshape(Q, nt * k)
-    iflat = jnp.moveaxis(idx, 0, 1).reshape(Q, nt * k)
-    v, pos = jax.lax.top_k(vflat, k)
-    return v, jnp.take_along_axis(iflat, pos, axis=1)
+    return _combine_tiles(vals, idx, k)
+
+
+@functools.partial(jax.jit, static_argnums=(4, 5))
+def mips_topk_int8(q, q_scale, x, x_scale, k, tile_n=512):
+    """Quantized exact-over-the-quantized-grid MIPS: q (Q,D) int8 with
+    per-row f32 ``q_scale`` (Q,), x (N,D) int8 with per-row ``x_scale``
+    (N,) -> (dequantized vals (Q,k), GLOBAL idx (Q,k)). Same clamping and
+    combine as ``mips_topk``; bit-for-bit against ref.mips_topk_int8_ref.
+    """
+    n = x.shape[0]
+    if k > n:
+        raise ValueError(f"k={k} exceeds store rows N={n}")
+    tile_n = max(min(tile_n, -(-n // 128) * 128), k)
+    vals, idx = mips_topk_int8_pallas(q, q_scale, x, x_scale, k,
+                                      tile_n=tile_n,
+                                      interpret=_default_interpret())
+    return _combine_tiles(vals, idx, k)
 
 
 @functools.partial(jax.jit, static_argnums=(3, 4, 5))

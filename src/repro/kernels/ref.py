@@ -1,15 +1,38 @@
-"""Pure-jnp oracles for every kernel in this package (the allclose targets
-for the interpret-mode shape/dtype sweeps in tests/test_kernels.py)."""
+"""Oracles for every kernel in this package: pure-jnp allclose targets for
+the attention kernels, and NUMPY bit-for-bit targets for the MIPS top-k
+pair (the int8 kernel's contract is exact, so its reference avoids jax
+entirely)."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def mips_topk_ref(q, x, k):
     """q: (Q,D); x: (N,D) -> (vals (Q,k), idx (Q,k)) exact MIPS top-k."""
     s = q.astype(jnp.float32) @ x.astype(jnp.float32).T
     return jax.lax.top_k(s, k)
+
+
+def topk_by_value_ref(s, k):
+    """Numpy top-k along the last axis ordered by (value desc, index asc) —
+    the exact tie-break contract of ``tile_topk`` and both MIPS kernels."""
+    s = np.asarray(s)
+    order = np.argsort(-s, axis=-1, kind="stable")[..., :k]
+    return np.take_along_axis(s, order, axis=-1), order.astype(np.int32)
+
+
+def mips_topk_int8_ref(q, q_scale, x, x_scale, k):
+    """Bit-for-bit reference for the int8 kernel: exact int32 accumulation,
+    then the SAME f32 dequant multiply order the kernel uses
+    (acc -> f32, * q_scale, * x_scale) and the same tie-break."""
+    q = np.asarray(q, np.int32)
+    x = np.asarray(x, np.int32)
+    s = (q @ x.T).astype(np.float32)
+    s = s * np.asarray(q_scale, np.float32)[:, None]
+    s = s * np.asarray(x_scale, np.float32)[None, :]
+    return topk_by_value_ref(s, k)
 
 
 def attention_ref(q, k, v, *, causal=True):

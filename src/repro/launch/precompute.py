@@ -43,6 +43,13 @@ def main(argv=None):
                          "up kill/resume determinism)")
     ap.add_argument("--embedder", choices=("hash", "minilm"),
                     default="hash")
+    ap.add_argument("--emb-dtype",
+                    choices=("float16", "float32", "int8"),
+                    default="float16",
+                    help="store embedding dtype; int8 writes symmetric "
+                         "per-row quantized shards + f32 scales (~26%% of "
+                         "fp32 bytes) served by the device-resident int8 "
+                         "MIPS path")
     ap.add_argument("--fresh", action="store_true",
                     help="refuse to resume; store dir must be empty")
     ap.add_argument("--no-index", action="store_true",
@@ -53,6 +60,7 @@ def main(argv=None):
     cfg = SystemCfg(
         embedder=args.embedder,
         index="none" if args.no_index else "auto",
+        emb_dtype=args.emb_dtype,
         precompute=PrecomputeCfg(
             wave=args.wave, checkpoint_every=args.checkpoint_every,
             background_recluster=args.background_recluster))

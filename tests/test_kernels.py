@@ -22,11 +22,15 @@ def _rand(rng, shape, dtype=np.float32):
 # ---------------------------------------------------------------------------
 
 
+# edge shapes by design: Q=1, k == tile_n, N < tile_n, D not lane-aligned
 @pytest.mark.parametrize("Q,N,D,k,tile", [
     (4, 100, 16, 5, 32),
     (8, 512, 384, 10, 128),
-    (1, 33, 24, 3, 32),
+    (1, 33, 24, 3, 32),        # Q=1
     (16, 1024, 64, 16, 512),
+    (2, 300, 100, 32, 32),     # k == tile_n, D not 128-aligned
+    (1, 64, 48, 64, 512),      # N < tile_n, k == N
+    (3, 200, 384, 1, 128),     # k=1 (the serving hot path)
 ])
 def test_mips_topk_matches_ref(Q, N, D, k, tile):
     rng = np.random.default_rng(Q + N)
@@ -54,6 +58,66 @@ def test_mips_topk_property(Q, N, D, k):
                                atol=1e-5)
     # all returned indices are valid rows
     assert (np.asarray(i) >= 0).all() and (np.asarray(i) < N).all()
+
+
+def test_tile_topk_exact_with_ties():
+    """The shared streaming tile top-k is EXACT including its tie-break
+    (value desc, index asc) — bitwise against the numpy reference."""
+    from repro.kernels.mips_topk import tile_topk
+    rng = np.random.default_rng(3)
+    for Q, T, k in [(4, 512, 10), (1, 128, 1), (3, 384, 16), (2, 256, 5),
+                    (5, 512, 100), (2, 64, 64), (2, 100, 7)]:
+        s = rng.normal(size=(Q, T)).astype(np.float32)
+        s[:, ::7] = s[:, 0:1]                  # force heavy value ties
+        v, i = tile_topk(jnp.asarray(s), k)
+        vr, ir = ref.topk_by_value_ref(s, k)
+        assert np.array_equal(np.asarray(v), vr), (Q, T, k)
+        assert np.array_equal(np.asarray(i), ir), (Q, T, k)
+
+
+def _quant(a):
+    from repro.core.store import quantize_rows
+    return quantize_rows(a)
+
+
+# same edge-shape sweep as the fp32 kernel; validation is BIT-FOR-BIT
+@pytest.mark.parametrize("Q,N,D,k,tile", [
+    (4, 100, 16, 5, 32),
+    (8, 512, 384, 10, 128),
+    (1, 33, 24, 3, 32),        # Q=1
+    (16, 1024, 64, 16, 512),
+    (2, 300, 100, 32, 32),     # k == tile_n, D not 128-aligned
+    (1, 64, 48, 64, 512),      # N < tile_n, k == N
+    (2, 700, 384, 1, 512),     # k=1 (the serving hot path)
+])
+def test_mips_topk_int8_bit_for_bit(Q, N, D, k, tile):
+    rng = np.random.default_rng(Q * 7 + N)
+    q8, qs = _quant(rng.normal(size=(Q, D)).astype(np.float32))
+    x8, xs = _quant(rng.normal(size=(N, D)).astype(np.float32))
+    v, i = ops.mips_topk_int8(jnp.asarray(q8), jnp.asarray(qs),
+                              jnp.asarray(x8), jnp.asarray(xs), k, tile)
+    vr, ir = ref.mips_topk_int8_ref(q8, qs, x8, xs, k)
+    assert np.array_equal(np.asarray(v), vr)
+    assert np.array_equal(np.asarray(i), ir)
+
+
+def test_mips_topk_int8_recall_parity():
+    """int8-vs-fp32 recall@1 >= 0.99 on the serving workload (queries are
+    near-duplicates of stored rows — the regime the threshold race uses)."""
+    rng = np.random.default_rng(11)
+    N, D, Q = 5000, 384, 256
+    x = rng.normal(size=(N, D)).astype(np.float32)
+    x /= np.linalg.norm(x, axis=1, keepdims=True)
+    q = x[rng.integers(0, N, Q)] \
+        + 0.05 * rng.normal(size=(Q, D)).astype(np.float32)
+    q = (q / np.linalg.norm(q, axis=1, keepdims=True)).astype(np.float32)
+    _, i32 = ref.mips_topk_ref(jnp.asarray(q), jnp.asarray(x), 1)
+    q8, qs = _quant(q)
+    x8, xs = _quant(x)
+    _, i8 = ops.mips_topk_int8(jnp.asarray(q8), jnp.asarray(qs),
+                               jnp.asarray(x8), jnp.asarray(xs), 1)
+    recall = (np.asarray(i8)[:, 0] == np.asarray(i32)[:, 0]).mean()
+    assert recall >= 0.99, recall
 
 
 # ---------------------------------------------------------------------------
