@@ -1,10 +1,17 @@
-"""Batched StorInfer serving throughput, two sections:
+"""Batched StorInfer serving throughput, three sections:
 
 1. **batched vs sequential** — `StorInfer.query` (the paper's Fig-2 loop)
    vs `StorInfer.query_batch` on the SAME system; amortization is the
    whole story (one embed + one MIPS dispatch per microbatch). Floor:
    >= 4x queries/sec at batch 32.
-2. **quantized flat scan** — the device-resident int8 path vs the pre-PR
+2. **pipelined serving** — a mixed 50/50 hit/miss stream through the
+   staged `ServingPipeline` (facade `serve()`/`submit()`, a real
+   smoke-arch engine decoding the misses). Measures the hit-latency
+   decoupling the paper's "instantly returns the stored response" story
+   requires: hits resolve at MIPS-search time, never waiting on any miss
+   decode. Floor: hit-path p50 <= 0.5x miss-path p50 (enforced in smoke
+   mode too — the margin is orders of magnitude when decode is real).
+3. **quantized flat scan** — the device-resident int8 path vs the pre-PR
    fp32 flat scan (kept verbatim below as `_LegacyFlatIndex`): same rows,
    serving-mix queries, N >= 100K in full mode. Floors: top-1 agreement
    with exact fp32 >= 0.99 on would-hit queries, int8 store bytes <= 30%
@@ -13,7 +20,8 @@
    configured floor (default 1.4x tripwire; measured ~2x at N=100K).
 
 Emits experiments/bench/BENCH_batched_serve.json AND a repo-root
-BENCH_serve.json (the machine-readable perf-trajectory point CI uploads).
+BENCH_serve.json (the machine-readable perf-trajectory point CI uploads,
+now carrying hit/miss p50+p99 for the pipelined path).
 Exits non-zero below any floor.
 
   PYTHONPATH=src python benchmarks/bench_batched_serve.py [--smoke]
@@ -36,8 +44,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import out_write
-from repro.api import StorInfer, SystemCfg, make_embedder, make_index, \
-    tier_of
+from repro.api import EngineCfg, StorInfer, SystemCfg, make_embedder, \
+    make_index, tier_of
 from repro.core.runtime import BatchedRuntimeCfg
 from repro.core.store import PrecomputedStore
 
@@ -77,7 +85,83 @@ def pcts(lat_s):
 
 
 # ---------------------------------------------------------------------------
-# Section 2: device-resident int8 flat scan vs the pre-PR fp32 path
+# Section 2: pipelined serving — hit p50 decoupled from miss decode
+# ---------------------------------------------------------------------------
+
+
+def bench_pipelined_serving(n_store, n_q, batch, s_th, ratio_floor,
+                            decode_slots=4, max_new=8, seed=1):
+    """Mixed 50/50 hit/miss stream through the staged pipeline end to end
+    (facade ``serve()``/``submit()``) with a real smoke-arch engine behind
+    the misses. The whole point of the stage decoupling: hit futures
+    resolve at MIPS-search time, so hit p50 must sit far below miss p50
+    instead of being gated by the slowest miss in the microbatch."""
+    with tempfile.TemporaryDirectory() as td:
+        build_synth_store(td, make_embedder("hash"), n_store)
+        cfg = SystemCfg(
+            s_th_run=s_th,
+            engine=EngineCfg(smoke=True, max_len=96, chunk=8),
+            batched=BatchedRuntimeCfg(max_batch=batch, max_wait_s=0.002),
+            decode_slots=decode_slots,
+            queue_depth=max(64, 2 * n_q))
+        queries = user_queries(n_q, n_store, hit_frac=0.5, seed=seed)
+        with StorInfer.open(td, cfg) as si:
+            with si.serve():
+                # warm the jit caches (search shape + prefill/decode) on a
+                # throwaway hit + miss before timing anything
+                warm = [si.submit("synthetic question 0 about topic 0 "
+                                  "and entity 0", max_new=max_new),
+                        si.submit("warmup novel zebra query xyz",
+                                  max_new=max_new)]
+                [f.result(timeout=600) for f in warm]
+
+                t0 = time.perf_counter()
+                futs = [si.submit(q, max_new=max_new) for q in queries]
+                results = [f.result(timeout=600) for f in futs]
+                wall = time.perf_counter() - t0
+            snap = si.stats().pipeline
+
+        hit_lat = [r.latency_s for r in results if r.hit]
+        miss_lat = [r.latency_s for r in results if not r.hit]
+        assert hit_lat and miss_lat, \
+            "mixed workload degenerated to one class — floor is vacuous"
+        hit_p, miss_p = pcts(hit_lat), pcts(miss_lat)
+        ratio = hit_p["p50_ms"] / miss_p["p50_ms"]
+        section = {
+            "n_store": n_store, "n_queries": n_q,
+            "decode_slots": decode_slots, "max_new": max_new,
+            "hit_rate": len(hit_lat) / n_q,
+            "hit": hit_p, "miss": miss_p,
+            "p50_ratio": ratio, "ratio_floor": ratio_floor,
+            "qps": n_q / wall,
+            "stages": snap["stages"],
+            "decode_reuse": snap.get("decode_slots"),
+        }
+        print(f"pipelined serving: store={n_store} queries={n_q} "
+              f"(hit_rate={section['hit_rate']:.2f}) "
+              f"decode_slots={decode_slots}")
+        print(f"  hit:  p50={hit_p['p50_ms']:8.2f}ms "
+              f"p99={hit_p['p99_ms']:8.2f}ms  (n={len(hit_lat)})")
+        print(f"  miss: p50={miss_p['p50_ms']:8.2f}ms "
+              f"p99={miss_p['p99_ms']:8.2f}ms  (n={len(miss_lat)})")
+        print(f"  hit/miss p50 ratio: {ratio:.3f} "
+              f"(floor {ratio_floor}) — {n_q / wall:.1f} q/s end-to-end")
+        reuse = section["decode_reuse"] or {}
+        if reuse:
+            print(f"  decode slots: {reuse['slots']} slots served "
+                  f"{reuse['admitted']} misses over {reuse['waves']} waves")
+
+        failures = []
+        if ratio > ratio_floor:
+            failures.append(
+                f"pipelined hit p50 {hit_p['p50_ms']:.2f}ms is "
+                f"{ratio:.2f}x miss p50 {miss_p['p50_ms']:.2f}ms "
+                f"(floor {ratio_floor}x) — hits are gated by miss decode")
+        return section, failures
+
+
+# ---------------------------------------------------------------------------
+# Section 3: device-resident int8 flat scan vs the pre-PR fp32 path
 # ---------------------------------------------------------------------------
 
 
@@ -230,12 +314,22 @@ def main(argv=None):
                     help="int8-vs-legacy scan throughput floor, enforced "
                          "in full mode (tripwire below the ~2x measured "
                          "at N=100K)")
+    ap.add_argument("--pipeline-queries", type=int, default=None,
+                    help="mixed-stream size for the pipelined section "
+                         "(default 64 full / 24 smoke)")
+    ap.add_argument("--pipeline-ratio-floor", type=float, default=0.5,
+                    help="hit p50 must be <= this fraction of miss p50 "
+                         "through the staged pipeline (enforced always)")
+    ap.add_argument("--decode-slots", type=int, default=4,
+                    help="persistent continuous-batching decode slots for "
+                         "the pipelined section")
     args = ap.parse_args(argv)
 
     n_store = args.n_store or (2000 if args.smoke else 20000)
     n_q = args.n_queries or (128 if args.smoke else 512)
     B = args.batch
     quant_rows = args.quant_rows or (8000 if args.smoke else 100_000)
+    pipe_q = args.pipeline_queries or (24 if args.smoke else 64)
 
     with tempfile.TemporaryDirectory() as td:
         build_synth_store(td, make_embedder("hash"), n_store)
@@ -298,6 +392,15 @@ def main(argv=None):
     if speedup < 4.0:
         failures.append(
             f"batched speedup {speedup:.1f}x below the 4x floor")
+
+    # hit-latency decoupling through the staged pipeline (floor enforced
+    # in smoke mode too — real decode keeps the margin wide)
+    payload["pipelined"], pf = bench_pipelined_serving(
+        n_store=2000 if args.smoke else 4000, n_q=pipe_q, batch=B,
+        s_th=0.9, ratio_floor=args.pipeline_ratio_floor,
+        decode_slots=args.decode_slots,
+        max_new=8 if args.smoke else 16)
+    failures += pf
 
     # the N>=100K bandwidth effect is what the floor measures; at smoke
     # scale the section still runs (recall + bytes floors enforced) but

@@ -40,8 +40,9 @@ Lifecycle:
         cached auto_index (+ engine when ``cfg.engine`` is set).
     .query() / .query_batch()                         sequential race /
         batched microbatch through one shared index.
-    .serve() / .submit()                              MicroBatcher-backed
-        admission queue (context manager).
+    .serve() / .submit()                              stage-decoupled
+        serving pipeline (context manager): instant hit returns,
+        continuous-batching miss decode, async write-back.
     .stats() / .close()                               accounting, teardown.
 """
 from __future__ import annotations
@@ -275,6 +276,12 @@ class SystemCfg:
         default_factory=BatchedRuntimeCfg)
     engine: Optional[EngineCfg] = None
     s_th_run: Optional[float] = None
+    # -- staged-pipeline conveniences (override cfg.batched's knobs) ------
+    decode_slots: Optional[int] = None     # persistent decode slot count
+    queue_depth: Optional[int] = None      # per-stage bounded queue depth
+    async_writeback: Optional[bool] = None  # §3.1 write-back off the
+    #                                         critical path (background
+    #                                         rebuild + atomic index swap)
     emb_dtype: str = "float16"         # store embedding dtype
     quantize: bool = False             # convenience: emb_dtype="int8"
     #                                    (symmetric per-row int8 shards +
@@ -288,6 +295,12 @@ class SystemCfg:
                                                s_th_run=self.s_th_run)
             self.batched = dataclasses.replace(self.batched,
                                                s_th_run=self.s_th_run)
+        pipeline_kw = {k: getattr(self, k)
+                       for k in ("decode_slots", "queue_depth",
+                                 "async_writeback")
+                       if getattr(self, k) is not None}
+        if pipeline_kw:
+            self.batched = dataclasses.replace(self.batched, **pipeline_kw)
         if self.quantize:
             self.emb_dtype = "int8"
         elif self.emb_dtype == "int8":
@@ -297,14 +310,18 @@ class SystemCfg:
 @dataclasses.dataclass
 class SystemStats:
     """One accounting view over the whole system: merged runtime counters
-    (sequential + batched paths), the store's storage split, and which
-    index tier is serving."""
+    (sequential + batched paths), the store's storage split, which index
+    tier is serving, and — when the staged serving pipeline has run — its
+    per-stage queue depth / wait accounting plus hit/miss latency
+    percentiles (``pipeline["stages"]``, ``pipeline["hit"]``,
+    ``pipeline["miss"]``; see ``serving.scheduler.PipelineStats``)."""
     runtime: RuntimeStats
     store_rows: int
     store_bytes: dict
     index_tier: str
     index_rows: int
     has_engine: bool
+    pipeline: Optional[dict] = None
 
 
 # ---------------------------------------------------------------------------
@@ -530,9 +547,12 @@ class StorInfer:
 
     @contextlib.contextmanager
     def serve(self):
-        """MicroBatcher-backed admission: inside the ``with`` block,
-        ``submit()`` enqueues queries that are processed in microbatches;
-        on exit the queue drains and stops (the system stays usable)."""
+        """Staged-pipeline admission: inside the ``with`` block,
+        ``submit()`` enqueues queries into the stage-decoupled serving
+        loop — hits resolve the moment their microbatch's MIPS search
+        returns, misses decode on the persistent continuous-batching
+        scheduler, write-backs rebuild in the background; on exit the
+        pipeline drains and stops (the system stays usable)."""
         self._require_index("serve()")
         self._batched.serve()
         try:
@@ -540,11 +560,14 @@ class StorInfer:
         finally:
             self._batched.stop_serving()
 
-    def submit(self, text: str, *, max_new: int = 32) -> Future:
-        """Enqueue one query (starts the admission queue on first use);
-        resolves to its QueryResult once its microbatch is processed."""
+    def submit(self, text: str, *, max_new: int = 32,
+               temperature=None) -> Future:
+        """Enqueue one query (starts the serving pipeline on first use);
+        a hit resolves at search time, a miss at decode completion with
+        ``temperature`` applied to its decode."""
         self._require_index("submit()")
-        return self._batched.submit(text, max_new=max_new)
+        return self._batched.submit(text, max_new=max_new,
+                                    temperature=temperature)
 
     # -- accounting -----------------------------------------------------------
     def stats(self) -> SystemStats:
@@ -559,4 +582,6 @@ class StorInfer:
             store_bytes=self.store.storage_bytes(),
             index_tier=tier_of(self.index),
             index_rows=len(self.index) if self.index is not None else 0,
-            has_engine=self.engine is not None)
+            has_engine=self.engine is not None,
+            pipeline=(self._batched.pipeline_stats()
+                      if self._batched is not None else None))

@@ -132,6 +132,10 @@ class DeviceStore:
         self._x = None         # kernel: (N, D) stored dtype
         self._scales = None    # kernel + quantized: (N,) f32
         self.uploads = 0       # host→device transfers (tests/benchmarks)
+        # background §3.1 rebuilds sync() deltas while the serving path
+        # searches the SAME cached residency — the lock keeps the
+        # (_x, _scales, n_rows) triple consistent across that race
+        self._sync_lock = threading.Lock()
         self.sync(source)
 
     @staticmethod
@@ -141,7 +145,12 @@ class DeviceStore:
 
     def sync(self, source) -> "DeviceStore":
         """Ingest rows the device copy doesn't have yet (the §3.1
-        write-back delta); a no-op when the store hasn't grown."""
+        write-back delta); a no-op when the store hasn't grown. Safe to
+        call from a background rebuild while searches are in flight."""
+        with self._sync_lock:
+            return self._sync_locked(source)
+
+    def _sync_locked(self, source) -> "DeviceStore":
         view = self._view(source)
         n, d = int(view.shape[0]), int(view.shape[1])
         if self.dim is None:
@@ -199,31 +208,37 @@ class DeviceStore:
     def matrix(self) -> jnp.ndarray:
         """The resident rows as a device (N, D) f32 matrix (IVF fits /
         list builds reuse the residency instead of re-uploading)."""
-        if self.n_rows == 0:
+        with self._sync_lock:
+            n_rows, xT, x, scales = (self.n_rows, self._xT, self._x,
+                                     self._scales)
+        if n_rows == 0:
             return jnp.zeros((0, self.dim or 0), jnp.float32)
         if self.layout == "gemm":
-            return self._xT.T
-        x = self._x.astype(jnp.float32)
-        return x * self._scales[:, None] if self.quantized else x
+            return xT.T
+        x = x.astype(jnp.float32)
+        return x * scales[:, None] if self.quantized else x
 
     def search(self, queries, k: int):
         """Exact flat MIPS over the resident rows: (vals, idx) ndarrays."""
         q = np.asarray(queries, np.float32)
         k = int(k)
-        if k > self.n_rows:
-            raise ValueError(f"k={k} exceeds store rows N={self.n_rows}")
+        with self._sync_lock:      # consistent (operand, scales, n) triple
+            n_rows = self.n_rows
+            xT, x, scales = self._xT, self._x, self._scales
+        if k > n_rows:
+            raise ValueError(f"k={k} exceeds store rows N={n_rows}")
         if self.layout == "gemm":
-            v, i = _flat_scan_T(jnp.asarray(q), self._xT, k)
+            v, i = _flat_scan_T(jnp.asarray(q), xT, k)
         elif self.quantized:
             from repro.kernels.ops import mips_topk_int8
             q8, qs = quantize_rows(q)
             v, i = mips_topk_int8(jnp.asarray(q8), jnp.asarray(qs),
-                                  self._x, self._scales, k)
+                                  x, scales, k)
         else:
             from repro.kernels.ops import mips_topk
             # the kernel scores fp16/fp32 tiles as-is (the MXU dot
             # upcasts in-register) — no per-search fp32 materialization
-            v, i = mips_topk(jnp.asarray(q), self._x, k)
+            v, i = mips_topk(jnp.asarray(q), x, k)
         return np.asarray(v), np.asarray(i)
 
 

@@ -14,12 +14,18 @@ Two runtimes share that structure:
 
   StorInferRuntime — the paper's one-query-at-a-time race (kept as the
       reference implementation and the sequential benchmark baseline).
-  BatchedRuntime   — the serving path: admits many concurrent queries,
-      embeds + MIPS-searches them as ONE batch through the index (Pallas
-      ``mips_topk`` on TPU), races that against ONE batched decode, cancels
-      the hit slots, and lets only the misses finish on the LLM. §3.1
-      ``add_misses`` write-back is batched too, with periodic store flush +
-      index-tier rebuild via ``auto_index``.
+  BatchedRuntime   — the serving path. Its async front door
+      (``serve``/``submit``) is the stage-decoupled
+      ``serving.scheduler.ServingPipeline``: admit → embed+search →
+      hit-resolve → decode → write-back, each stage its own worker behind
+      a bounded queue. Hits resolve the moment the MIPS search returns;
+      misses flow into one persistent continuous-batching
+      ``BatchScheduler`` whose freed slots are refilled between waves;
+      §3.1 ``add_misses`` write-back + ``flush_and_rebuild`` run off the
+      critical path with the index swapped atomically. ``query_batch``
+      stays as the synchronous compatibility path over the same stage
+      helpers (one embed + one MIPS dispatch + one batched decode racing
+      it, hit slots cancelled mid-flight).
 """
 from __future__ import annotations
 
@@ -65,34 +71,40 @@ class StorInferRuntime:
         self._pool = ThreadPoolExecutor(max_workers=2)
 
     # -- the search half ------------------------------------------------------
-    def search(self, text: str):
+    def _search_emb(self, text: str):
+        """Score + row + the query embedding (threaded through so the
+        §3.1 write-back path never re-encodes what search already did)."""
         t0 = time.perf_counter()
         e = self.embedder.encode([text])
         v, i = self.index.search(e, 1)
         dt = time.perf_counter() - t0
-        return float(v[0, 0]), int(i[0, 0]), dt
+        return float(v[0, 0]), int(i[0, 0]), e, dt
+
+    def search(self, text: str):
+        score, row, _, dt = self._search_emb(text)
+        return score, row, dt
 
     # -- full parallel query path ----------------------------------------------
     def query(self, text: str, *, max_new: int = 32,
               temperature=None) -> QueryResult:
         t0 = time.perf_counter()
-        fut = self._pool.submit(self.search, text)
+        fut = self._pool.submit(self._search_emb, text)
 
         session = None
         if self.engine is not None:
             session = self.engine.start_session(text, max_new=max_new,
                                                 temperature=temperature)
 
-        score = row = search_s = None
+        score = row = emb = search_s = None
         while session is not None and not session.done:
             if fut.done():
-                score, row, search_s = fut.result()
+                score, row, emb, search_s = fut.result()
                 if score >= self.cfg.s_th_run:
                     session.cancel()         # Fig 2 termination signal
                 break                        # miss: decode continues below
             session.step_chunk()
         if score is None:                    # session won the race (or none)
-            score, row, search_s = fut.result()
+            score, row, emb, search_s = fut.result()
 
         if score >= self.cfg.s_th_run:
             mq, resp = self.store.get_pair(row)
@@ -112,8 +124,8 @@ class StorInferRuntime:
                 session.step_chunk()
             llm_text = session.text()
             if self.cfg.add_misses:
-                e = self.embedder.encode([text])
-                self.store.add_batch(e, [text], [llm_text])
+                # the race's search already encoded this query — reuse it
+                self.store.add_batch(emb, [text], [llm_text])
         return QueryResult(
             response=llm_text, source="llm", hit=False, score=score,
             matched_query=None, search_s=search_s,
@@ -151,7 +163,13 @@ class BatchedRuntimeCfg:
     max_wait_s: float = 0.005  # admission window after the first arrival
     add_misses: bool = False   # §3.1 write-back of fresh (query, response)
     rebuild_every: int = 256   # write-backs between flush + index rebuild
-    engine_slots: Optional[int] = None  # decode slots (None: one per query)
+    engine_slots: Optional[int] = None  # sync-path decode slots
+    #                                     (None: one per query in the batch)
+    # -- ServingPipeline knobs (the serve()/submit() front door) ----------
+    decode_slots: int = 4      # persistent continuous-batching slot count
+    queue_depth: int = 64      # per-stage bounded queue depth (backpressure)
+    async_writeback: bool = True   # §3.1 write-back + rebuild off the
+    #                                critical path on a background worker
 
 
 @dataclasses.dataclass
@@ -172,8 +190,15 @@ class RuntimeStats:
 
 
 class BatchedRuntime:
-    """Batched StorInfer serving: one embed + one MIPS search + one batched
-    decode per microbatch, hit slots cancelled mid-flight.
+    """Batched StorInfer serving over the staged pipeline.
+
+    The async front door (``serve``/``submit``) runs the stage-decoupled
+    ``ServingPipeline``: hits resolve at search time, misses decode on a
+    persistent continuous-batching scheduler, write-backs rebuild the
+    index in the background. ``query_batch`` is the synchronous
+    compatibility path: one embed + one MIPS search + one batched decode
+    racing it, hit slots cancelled mid-flight — same stage helpers, with
+    a barrier at the end.
 
     ``index`` may be any of FlatIndex/IVFIndex/ShardedIndex; use
     ``BatchedRuntime.from_store`` to let ``auto_index`` pick the tier.
@@ -197,8 +222,13 @@ class BatchedRuntime:
         self._rebuild = rebuild
         self.stats = RuntimeStats()
         self._pool = ThreadPoolExecutor(max_workers=2)
-        self._batcher = None
-        self._batcher_lock = threading.Lock()
+        self._pipeline = None
+        self._last_pipeline = None       # stats survive stop_serving()
+        self._pipeline_lock = threading.Lock()
+        self._stats_lock = threading.Lock()    # pipeline workers + sync path
+        self._index_lock = threading.Lock()    # atomic index swap vs search
+        self._wb_lock = threading.Lock()       # write-back accounting
+        self._rebuild_lock = threading.Lock()  # one rebuild at a time
         self._pending_writebacks = 0
 
     @classmethod
@@ -219,17 +249,26 @@ class BatchedRuntime:
                    embedder, engine, cfg=cfg, mesh=mesh,
                    auto_index_kw=auto_index_kw)
 
-    # -- the search half ------------------------------------------------------
+    # -- the search half (stage 2 of the pipeline) ----------------------------
     def _search_batch(self, texts: List[str]):
         t0 = time.perf_counter()
         embs = self.embedder.encode(texts)
-        v, i = self.index.search(embs, 1)
+        with self._index_lock:
+            index = self.index      # snapshot: rebuilds swap atomically;
+        #                             an in-flight search keeps the old one
+        v, i = index.search(embs, 1)
         return v[:, 0], i[:, 0], embs, time.perf_counter() - t0
 
     # -- synchronous batched query path ---------------------------------------
     def query_batch(self, texts: Sequence[str], *,
                     max_new: Union[int, Sequence[int]] = 32,
                     temperature=None) -> List[QueryResult]:
+        """The synchronous compatibility path: the whole batch returns
+        together, but each ``QueryResult`` carries ITS OWN resolve time —
+        hits are stamped when the search returned (the moment the staged
+        pipeline would have resolved them), misses when their decode slot
+        retired — so latency percentiles computed from a batch are real,
+        not one batch-wide number repeated."""
         texts = list(texts)
         if not texts:
             return []
@@ -254,103 +293,138 @@ class BatchedRuntime:
             session.step_chunk()
         if search is None:
             search = fut.result()
+        t_searched = time.perf_counter()     # hits are resolvable NOW
         scores, rows, embs, search_s = search
         cancelled_rids = set()
+        reqs = {}
         if session is not None:
             session.run()                    # only miss slots still live
             # a cancel only saved decode work if the request had actually
             # entered a decode wave (slot assigned); cancelled-while-waiting
             # or finished-before-cancel don't count
-            cancelled_rids = {r.rid for r in session.results()
+            reqs = {r.rid: r for r in session.results()}
+            cancelled_rids = {rid for rid, r in reqs.items()
                               if r.cancelled and r.slot >= 0}
 
         results: List[QueryResult] = []
         miss_idx: List[int] = []
         llm_s = session.decode_s if session is not None else 0.0
-        chunks = session.chunks_run if session is not None else 0
-        latency = time.perf_counter() - t0
+        hit_latency = t_searched - t0
         for qi, text in enumerate(texts):
             score = float(scores[qi])
+            req = reqs.get(qi)
+            chunks = req.chunks if req is not None else 0
             if score >= self.cfg.s_th_run:
                 mq, resp = self.store.get_pair(int(rows[qi]))
                 results.append(QueryResult(
                     response=resp, source="store", hit=True, score=score,
                     matched_query=mq, search_s=search_s, llm_s=llm_s,
-                    latency_s=latency, chunks_run=chunks,
+                    latency_s=hit_latency, chunks_run=chunks,
                     cancelled=qi in cancelled_rids))
             else:
                 miss_idx.append(qi)
                 resp = session.text(qi) if session is not None else ""
+                done = (req.t_done if req is not None and req.t_done
+                        else t_searched)
                 results.append(QueryResult(
                     response=resp, source="llm", hit=False, score=score,
                     matched_query=None, search_s=search_s, llm_s=llm_s,
-                    latency_s=latency, chunks_run=chunks))
+                    latency_s=done - t0, chunks_run=chunks))
 
         n_hits = len(texts) - len(miss_idx)
-        self.stats.queries += len(texts)
-        self.stats.hits += n_hits
-        self.stats.misses += len(miss_idx)
-        self.stats.batches += 1
-        self.stats.llm_cancelled += len(cancelled_rids)
+        with self._stats_lock:
+            self.stats.queries += len(texts)
+            self.stats.hits += n_hits
+            self.stats.misses += len(miss_idx)
+            self.stats.batches += 1
+            self.stats.llm_cancelled += len(cancelled_rids)
 
         if (self.cfg.add_misses and session is not None and miss_idx):
             import numpy as np
-            self.store.add_batch(
-                np.asarray(embs)[miss_idx],
-                [texts[qi] for qi in miss_idx],
-                [results[qi].response for qi in miss_idx])
-            self.stats.writebacks += len(miss_idx)
-            self._pending_writebacks += len(miss_idx)
-            if self._pending_writebacks >= self.cfg.rebuild_every:
-                self.flush_and_rebuild()
+            self._writeback(np.asarray(embs)[miss_idx],
+                            [texts[qi] for qi in miss_idx],
+                            [results[qi].response for qi in miss_idx])
         return results
+
+    # -- §3.1 write-back + rebuild (stage 5 of the pipeline) ------------------
+    def _writeback(self, embs, texts, responses):
+        """Append fresh (query, response) pairs and trigger the periodic
+        flush + rebuild. Called synchronously by ``query_batch`` and from
+        the pipeline's background write-back worker."""
+        import numpy as np
+        with self._wb_lock:
+            self.store.add_batch(np.asarray(embs), list(texts),
+                                 list(responses))
+            with self._stats_lock:
+                self.stats.writebacks += len(texts)
+            self._pending_writebacks += len(texts)
+            need = self._pending_writebacks >= self.cfg.rebuild_every
+        if need:
+            self.flush_and_rebuild()
 
     def flush_and_rebuild(self):
         """Persist pending write-backs and rebuild the index over the grown
-        store. With the default ``auto_index`` path the tier is re-picked,
-        so a store that outgrew the flat boundary comes back as IVF (or
-        Sharded on a mesh); a ``rebuild`` callable pins the caller's
-        choice instead."""
-        self.store.flush()
-        if self._rebuild is not None:
-            self.index = self._rebuild(self.store, self.mesh)
-        else:
-            from repro.core.index import auto_index
-            self.index = auto_index(self.store, self.mesh,
-                                    **self._auto_index_kw)
-        self.stats.index_rebuilds += 1
-        self._pending_writebacks = 0
+        store, then SWAP it atomically under the index lock — searches in
+        flight keep their snapshot, later ones see the new index. With the
+        default ``auto_index`` path the tier is re-picked, so a store that
+        outgrew the flat boundary comes back as IVF (or Sharded on a
+        mesh); a ``rebuild`` callable pins the caller's choice instead."""
+        with self._rebuild_lock:
+            self.store.flush()
+            if self._rebuild is not None:
+                new_index = self._rebuild(self.store, self.mesh)
+            else:
+                from repro.core.index import auto_index
+                new_index = auto_index(self.store, self.mesh,
+                                       **self._auto_index_kw)
+            with self._index_lock:
+                self.index = new_index
+            with self._stats_lock:
+                self.stats.index_rebuilds += 1
+            with self._wb_lock:
+                self._pending_writebacks = 0
 
     # -- async admission (the serving front door) -----------------------------
     def serve(self):
-        """Start (or return) the MicroBatcher admission queue. Safe to call
-        from many threads — ``submit`` races here on first use, and two
-        batchers would interleave reads on the shared store handle."""
-        from repro.serving.scheduler import MicroBatcher
-        with self._batcher_lock:
-            if self._batcher is None:
-                self._batcher = MicroBatcher(
-                    self._process_submissions, max_batch=self.cfg.max_batch,
-                    max_wait_s=self.cfg.max_wait_s).start()
-            return self._batcher
+        """Start (or return) the staged ServingPipeline. Safe to call from
+        many threads — ``submit`` races here on first use, and two
+        pipelines would interleave reads on the shared store handle."""
+        from repro.serving.scheduler import ServingPipeline
+        with self._pipeline_lock:
+            if self._pipeline is None:
+                self._pipeline = ServingPipeline(
+                    self, max_batch=self.cfg.max_batch,
+                    max_wait_s=self.cfg.max_wait_s,
+                    queue_depth=self.cfg.queue_depth,
+                    decode_slots=self.cfg.decode_slots,
+                    async_writeback=self.cfg.async_writeback).start()
+                self._last_pipeline = self._pipeline
+            return self._pipeline
 
-    def _process_submissions(self, subs):
-        return self.query_batch([s.text for s in subs],
-                                max_new=[s.max_new for s in subs])
+    def submit(self, text: str, *, max_new: int = 32,
+               temperature=None) -> Future:
+        """Enqueue one query; a hit resolves the moment its microbatch's
+        search returns, a miss when its decode slot retires.
+        ``temperature`` applies to the miss decode (the scheduler admits
+        same-temperature requests into one wave)."""
+        return self.serve().submit(text, max_new=max_new,
+                                   temperature=temperature)
 
-    def submit(self, text: str, *, max_new: int = 32) -> Future:
-        """Enqueue one query; resolves to its QueryResult once its
-        microbatch is processed."""
-        return self.serve().submit(text, max_new=max_new)
+    def pipeline_stats(self) -> Optional[dict]:
+        """Snapshot of the staged pipeline's accounting (per-stage queue
+        depth + wait, hit/miss latency percentiles, decode-slot reuse);
+        None if serve() was never started. Survives ``stop_serving``."""
+        p = self._pipeline or self._last_pipeline
+        return p.stats_snapshot() if p is not None else None
 
     def stop_serving(self, drain: bool = True):
-        """Stop the admission queue (if running) without tearing down the
+        """Stop the pipeline (if running) without tearing down the
         runtime — synchronous ``query_batch`` keeps working and ``serve``
-        can start a fresh batcher later."""
-        with self._batcher_lock:
-            if self._batcher is not None:
-                self._batcher.stop(drain=drain)
-                self._batcher = None
+        can start a fresh pipeline later."""
+        with self._pipeline_lock:
+            if self._pipeline is not None:
+                self._pipeline.stop(drain=drain)
+                self._pipeline = None
 
     def close(self):
         self.stop_serving()

@@ -190,6 +190,8 @@ class Request:
     done: bool = False
     cancelled: bool = False
     slot: int = -1
+    t_done: float = 0.0       # perf_counter stamp when the slot retired
+    chunks: int = 0           # decode chunks this request was live for
 
 
 class BatchScheduler:
@@ -202,7 +204,15 @@ class BatchScheduler:
     so a new prompt may only be admitted when no slot is mid-decode (a
     mid-flight admission would reset ``cache_len`` under the live slots)
     and every prompt admitted into one wave must tokenize to the same
-    length. Mixed-length traffic simply forms multiple waves."""
+    length. Mixed-length traffic simply forms multiple waves.
+
+    The scheduler is built to be PERSISTENT: slots join and leave between
+    waves (a freed slot — finished or hit-cancelled — is refilled from
+    ``waiting`` as soon as the wave drains) rather than the whole batch
+    being torn down per admission. ``ServingPipeline``'s decode stage
+    keeps one instance alive across every microbatch and feeds misses in
+    continuously; ``waves`` / ``admitted`` / ``slot_uses`` account for
+    the reuse."""
 
     def __init__(self, engine: Engine, batch_size: int = 4):
         self.e = engine
@@ -216,9 +226,24 @@ class BatchScheduler:
         self.waiting: List[Request] = []
         self.finished: List[Request] = []
         self.rng = jax.random.PRNGKey(0)
+        self.waves = 0                      # admission waves opened
+        self.admitted = 0                   # requests given a slot, ever
+        self.slot_uses = [0] * batch_size   # admissions per slot (reuse)
 
     def submit(self, req: Request):
         self.waiting.append(req)
+
+    @property
+    def idle(self) -> bool:
+        """Nothing decoding and nothing waiting for a slot."""
+        return not self.live.any() and not self.waiting
+
+    def drain_finished(self) -> List[Request]:
+        """Pop and return everything finished since the last drain (the
+        persistent-loop accessor; ``BatchSession.results`` reads the
+        accumulating ``finished`` list instead)."""
+        done, self.finished = self.finished, []
+        return done
 
     def cancel(self, rid: int):
         for r in self.reqs:
@@ -232,21 +257,32 @@ class BatchScheduler:
         if self.live.any():
             return          # wave in flight; next wave starts once it drains
         wave_len = None
+        wave_temp = _UNSET = object()
         free = list(range(self.B))
         while free and self.waiting:
             req = self.waiting[0]
             if req.cancelled:
                 self.waiting.pop(0)
                 req.done = True
+                req.t_done = time.perf_counter()
                 self.finished.append(req)
                 continue
             ids = self.e.tok.encode(req.prompt, bos=True)
             ids = ids[: self.e.max_len - req.max_new - 1]
             if wave_len is not None and len(ids) != wave_len:
                 break       # different prompt length -> opens the next wave
+            if wave_temp is not _UNSET and req.temperature != wave_temp:
+                break       # decode runs ONE temperature per chunk, so a
+            #                 wave admits only same-temperature requests
+            #                 (mixed traffic forms waves, like lengths)
             self.waiting.pop(0)
+            wave_temp = req.temperature
+            if wave_len is None:
+                self.waves += 1
             wave_len = len(ids)
             slot = free.pop(0)
+            self.admitted += 1
+            self.slot_uses[slot] += 1
             tokens = jnp.asarray([ids], jnp.int32)
             logits, one_cache = self.e._prefill(self.e.params, tokens)
             self.cache = self.e._write_slot(self.cache, one_cache,
@@ -267,6 +303,7 @@ class BatchScheduler:
             if (r.cancelled or len(r.out_ids) >= r.max_new
                     or (r.out_ids and r.out_ids[-1] == EOS)):
                 r.done = True
+                r.t_done = time.perf_counter()
                 self.finished.append(r)
                 self.reqs[slot] = None
                 self.live[slot] = False
@@ -288,6 +325,7 @@ class BatchScheduler:
             r = self.reqs[slot]
             if r is None:
                 continue
+            r.chunks += 1
             for t in toks[slot]:
                 if len(r.out_ids) >= r.max_new or t == EOS:
                     break
